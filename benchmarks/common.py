@@ -1,0 +1,80 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import FederatedConfig, PEFTConfig, STLDConfig, TrainConfig, get_config
+
+# the smoke model every simulation benchmark trains (CPU-sized), and the
+# full-size config used for system-model cost accounting (paper scale)
+SIM_ARCH = "qwen3-1.7b"
+
+
+def sim_model_cfg():
+    # 8 layers: deep enough for layer dropout to behave as in the paper's
+    # 12-24-layer models (at 4 layers, dropping half the depth is degenerate)
+    return get_config(SIM_ARCH, smoke=True).replace(
+        num_layers=8, d_model=64, d_ff=128, num_heads=4, num_kv_heads=2,
+        vocab_size=512, dtype="float32",
+    )
+
+
+def cost_model_cfg():
+    return get_config(SIM_ARCH)  # 1.7B — closest assigned arch to the paper's 1.5B
+
+
+def fed_cfg(rounds=8, devices=8, cohort=4, alpha=1.0, **kw):
+    return FederatedConfig(
+        num_devices=devices, devices_per_round=cohort, local_steps=4,
+        batch_size=16, rounds=rounds, dirichlet_alpha=alpha,
+        # moderate-rate grid + short exploit phases: the bandit must converge
+        # within the short smoke sessions (paper runs 100 rounds)
+        rate_grid=(0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7),
+        explore_interval=4,
+        **kw,
+    )
+
+
+def train_cfg():
+    return TrainConfig(learning_rate=5e-3, total_steps=400, warmup_steps=5)
+
+
+def run_sim(strategy, *, rounds=8, peft="lora", stld_mode="cond", fixed_rate=None,
+            distribution="incremental", alpha=1.0, seed=0):
+    from repro.federated.simulator import METHODS, FederatedSimulator, Strategy
+
+    strat = METHODS[strategy] if isinstance(strategy, str) else strategy
+    if fixed_rate is not None:
+        strat = Strategy(**{**strat.__dict__, "configurator": False, "fixed_rate": fixed_rate})
+    sim = FederatedSimulator(
+        sim_model_cfg(),
+        PEFTConfig(method=peft, lora_rank=4, adapter_dim=8),
+        STLDConfig(mode=stld_mode, mean_rate=fixed_rate or 0.5, distribution=distribution),
+        fed_cfg(rounds=rounds, alpha=alpha),
+        train_cfg(),
+        strategy=strat,
+        cost_cfg=cost_model_cfg(),
+        seed=seed,
+    )
+    return sim.run(rounds=rounds)
+
+
+def timeit(fn, *args, iters=3, warmup=1):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    try:
+        import jax
+
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

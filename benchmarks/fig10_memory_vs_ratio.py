@@ -1,0 +1,25 @@
+"""Paper Fig. 10: peak memory vs dropout ratio (qwen3-1.7b scale, NX device).
+
+Checks the ~linear memory scaling with the active fraction and the paper's
+40-67% reduction band at ratios 0.5-0.7.
+"""
+from __future__ import annotations
+
+from benchmarks.common import cost_model_cfg, emit
+from repro.configs import PEFTConfig
+from repro.federated.system_model import SystemModel
+
+
+def run(quick: bool = False):
+    cfg = cost_model_cfg()
+    sm = SystemModel(cfg, PEFTConfig(method="lora", lora_rank=8))
+    base = sm.memory_breakdown(batch=16, seq=256, peft=True, active_fraction=1.0).total_gb
+    for ratio in (0.0, 0.2, 0.4, 0.6, 0.8):
+        m = sm.memory_breakdown(batch=16, seq=256, peft=True, active_fraction=1.0 - ratio)
+        emit(
+            f"fig10/ratio_{ratio}",
+            m.total_gb * 1000,
+            f"total_gb={m.total_gb:.2f};saving={1 - m.total_gb/base:.2f}",
+        )
+    m06 = sm.memory_breakdown(batch=16, seq=256, peft=True, active_fraction=0.4).total_gb
+    assert 0.40 < 1 - m06 / base < 0.75, "paper band: >50% saving at ratio 0.6"

@@ -1,0 +1,23 @@
+"""Paper Figs. 11-12: per-device energy and total network traffic."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, run_sim
+
+
+def run(quick: bool = False):
+    rounds = 4 if quick else 8
+    res = {}
+    for strategy, peft in (("fedlora", "lora"), ("droppeft", "lora"),
+                            ("fedadapter", "adapter"), ("droppeft", "adapter")):
+        r = run_sim(strategy, rounds=rounds, peft=peft, seed=3)
+        res[f"{strategy}({peft})"] = r
+        emit(
+            f"fig11_12/{strategy}({peft})",
+            float(np.sum(r.energy_j)),
+            f"energy_kj={np.sum(r.energy_j)/1e3:.1f};traffic_mb={np.sum(r.traffic_mb):.0f}",
+        )
+    # DropPEFT saves energy (fewer FLOPs per round) and traffic (PTLS upload)
+    assert np.sum(res["droppeft(lora)"].energy_j) < np.sum(res["fedlora(lora)"].energy_j)
+    assert np.sum(res["droppeft(lora)"].traffic_mb) < np.sum(res["fedlora(lora)"].traffic_mb)

@@ -1,0 +1,31 @@
+"""Paper Figs. 13-14: ablations.
+
+Fig 13 — STLD: DropPEFT vs DropPEFT-b1 (all layers always active).
+Fig 14 — configurator: adaptive bandit vs fixed dropout-rate configs.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_sim
+
+
+def run(quick: bool = False):
+    rounds = 5 if quick else 12
+
+    full = run_sim("droppeft", rounds=rounds, seed=4)
+    b1 = run_sim("droppeft_b1", rounds=rounds, seed=4)
+    emit("fig13/droppeft", full.cum_time_s[-1] * 1e6, f"acc={full.accuracy[-1]:.3f}")
+    emit("fig13/b1_no_stld", b1.cum_time_s[-1] * 1e6, f"acc={b1.accuracy[-1]:.3f}")
+    assert full.cum_time_s[-1] < b1.cum_time_s[-1], "STLD must reduce wall time"
+
+    for rate in ((0.5,) if quick else (0.2, 0.5, 0.8)):
+        fixed = run_sim("droppeft_b2", rounds=rounds, fixed_rate=rate, seed=4)
+        emit(
+            f"fig14/fixed_{rate}",
+            fixed.cum_time_s[-1] * 1e6,
+            f"acc={fixed.accuracy[-1]:.3f};time_h={fixed.cum_time_s[-1]/3600:.2f}",
+        )
+    emit(
+        "fig14/adaptive",
+        full.cum_time_s[-1] * 1e6,
+        f"acc={full.accuracy[-1]:.3f};time_h={full.cum_time_s[-1]/3600:.2f}",
+    )

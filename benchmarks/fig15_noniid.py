@@ -1,0 +1,35 @@
+"""Paper Fig. 15: final accuracy under varying non-IIDness (Dirichlet alpha);
+PTLS (DropPEFT) vs no-PTLS (DropPEFT-b3)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_sim
+
+
+def run(quick: bool = False):
+    alphas = (1.0, 0.1) if quick else (10.0, 1.0, 0.1)
+    rounds = 5 if quick else 12
+    degradation = {}
+    final_accs = {}
+    for strategy in ("droppeft", "droppeft_b3"):
+        accs = {}
+        for alpha in alphas:
+            res = run_sim(strategy, rounds=rounds, alpha=alpha, seed=5)
+            accs[alpha] = res.final_accuracy
+            emit(f"fig15/{strategy}/alpha_{alpha}", 0.0, f"final_acc={res.final_accuracy:.3f}")
+        degradation[strategy] = accs[max(alphas)] - accs[min(alphas)]
+        final_accs[strategy] = accs
+    emit(
+        "fig15/ptls_robustness",
+        0.0,
+        f"degradation_ptls={degradation['droppeft']:.3f};"
+        f"degradation_noptls={degradation['droppeft_b3']:.3f}",
+    )
+    # At smoke scale, per-device evaluation makes extreme skew EASIER (local
+    # test sets narrow), so absolute degradation can invert sign; the paper's
+    # claim maps to the relative statement: PTLS >= no-PTLS at high skew.
+    lo = min(alphas)
+    emit(
+        "fig15/high_skew_ptls_vs_noptls",
+        0.0,
+        f"ptls={final_accs['droppeft'][lo]:.3f};noptls={final_accs['droppeft_b3'][lo]:.3f}",
+    )

@@ -1,0 +1,27 @@
+"""Paper Fig. 6: sensitivity to (a) average dropout rate and (b) the
+per-layer distribution shape at a fixed 0.5 average."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_sim
+
+
+def run(quick: bool = False):
+    rates = (0.3, 0.7) if quick else (0.1, 0.3, 0.5, 0.7, 0.9)
+    rounds = 5 if quick else 10
+    accs = {}
+    for rate in rates:
+        res = run_sim("droppeft_b2", rounds=rounds, fixed_rate=rate, seed=2)
+        accs[rate] = res
+        emit(
+            f"fig6a/rate_{rate}",
+            res.cum_time_s[-1] * 1e6,
+            f"acc={res.accuracy[-1]:.3f};time_h={res.cum_time_s[-1]/3600:.2f}",
+        )
+    # extreme dropout must be cheaper per round than conservative dropout
+    if 0.1 in accs and 0.9 in accs:
+        assert accs[0.9].cum_time_s[-1] < accs[0.1].cum_time_s[-1]
+
+    dists = ("uniform", "incremental") if quick else ("uniform", "incremental", "decay", "normal")
+    for dist in dists:
+        res = run_sim("droppeft_b2", rounds=rounds, fixed_rate=0.5, distribution=dist, seed=2)
+        emit(f"fig6b/{dist}", res.cum_time_s[-1] * 1e6, f"acc={res.accuracy[-1]:.3f}")

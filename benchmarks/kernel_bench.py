@@ -1,0 +1,51 @@
+"""Kernel micro-bench: us/call for the Pallas hot spots vs their XLA refs.
+
+On this CPU container the Pallas kernels run in interpret mode (python —
+timings are NOT meaningful for TPU); the XLA-path timings plus the analytic
+FLOP counts are the portable signal, and both are reported.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ops
+
+
+def run(quick: bool = False):
+    key = jax.random.PRNGKey(0)
+    b, h, s, d = 1, 4, 256, 64
+    q = jax.random.normal(key, (b, h, s, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, h, s, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, h, s, d))
+    flops_attn = 4 * b * h * s * s // 2 * d
+    us = timeit(lambda: ops.flash_attention(q, k, v, impl="xla"))
+    emit("kernels/attention_xla_ref", us, f"gflops={flops_attn/us/1e3:.1f};shape=b{b}h{h}s{s}d{d}")
+
+    r = 0.5 * jax.random.normal(key, (1, 128, 4, 64))
+    import jax.numpy as jnp
+
+    logw = jnp.clip(-jnp.exp(jax.random.normal(key, (1, 128, 4, 64))), -4.0, -1e-4)
+    u = 0.1 * jax.random.normal(key, (4, 64))
+    us = timeit(lambda: ops.wkv6(r, r, r, logw, u, impl="xla"))
+    emit("kernels/wkv6_xla_ref", us, "shape=b1s128h4k64")
+
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 128, 128)))
+    bm = jax.random.normal(key, (1, 128, 16))
+    a = -jnp.exp(jax.random.normal(key, (128, 16)))
+    dv = jnp.ones((128,))
+    us = timeit(lambda: ops.mamba_scan(dt, dt, bm, bm, a, dv, impl="xla"))
+    emit("kernels/mamba_scan_xla_ref", us, "shape=b1s128d128n16")
+
+    x = jax.random.normal(key, (256, 512))
+    w = jax.random.normal(key, (512, 512))
+    la = jax.random.normal(key, (512, 8))
+    lb = jax.random.normal(key, (8, 512))
+    us = timeit(lambda: ops.lora_matmul(x, w, la, lb, impl="xla"))
+    flops = 2 * 256 * 512 * 512
+    emit("kernels/lora_matmul_xla_ref", us, f"gflops={flops/us/1e3:.1f}")
+
+    if not quick:
+        # interpret-mode correctness spot checks double as bench entries
+        us = timeit(lambda: ops.flash_attention(q[:, :, :64], k[:, :, :64], v[:, :, :64], block_q=32, block_k=32), iters=1, warmup=1)
+        emit("kernels/attention_pallas_interpret", us, "correctness-path; not TPU timing")

@@ -1,0 +1,72 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report > results/roofline_report.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+from benchmarks.roofline import load_records, markdown_table, roofline_row
+
+
+def dryrun_table() -> str:
+    recs = load_records()
+    out = [
+        "| arch | shape | mesh | status | compile (s) | HLO GFLOPs/dev | HLO GB/dev | coll GB/dev | resident GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r.get("mesh", ""))):
+        if r.get("tags"):
+            continue  # variants appear in §Perf, not the baseline table
+        if r.get("skipped"):
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP (sub-quadratic gate) | — | — | — | — | — |"
+            )
+            continue
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAIL** | — | — | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | {r['compile_s']:.0f} "
+            f"| {r['flops']/1e9:.1f} | {r['bytes_accessed']/1e9:.1f} "
+            f"| {r['collectives']['total']/1e9:.2f} "
+            f"| {r['memory']['argument_bytes']/2**30:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    print("## Dry-run table\n")
+    print(dryrun_table())
+    print("\n## Roofline table (single-pod baselines)\n")
+    rows = [r for r in load_records() if r.get("ok") and not r.get("tags") and r["mesh"] == "16x16"]
+    print(markdown_table_from(rows))
+    print("\n## Dominant-term summary\n")
+    doms = defaultdict(list)
+    for rec in rows:
+        row = roofline_row(rec)
+        doms[row["dominant"]].append(f"{row['arch']}/{row['shape']}")
+    for k, v in sorted(doms.items()):
+        print(f"- **{k}** ({len(v)}): {', '.join(v)}")
+
+
+def markdown_table_from(recs):
+    out = [
+        "| arch | shape | stld | compute (s) | memory lb (s) | memory ub (s) | collective (s) | dominant | useful | resident GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        r = roofline_row(rec)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['stld']} "
+            f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} | {r['t_memory_ub_s']:.2e} "
+            f"| {r['t_collective_s']:.2e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['resident_gib']:.2f} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    main()

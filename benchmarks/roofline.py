@@ -1,0 +1,187 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads ``results/dryrun/*.json`` and derives, per (arch x shape x mesh):
+
+    compute    = HLO_FLOPs / (chips x 197e12)           [s]
+    memory     = HLO_bytes / (chips x 819e9)            [s]
+    collective = collective_bytes / (chips x 50e9)      [s]
+
+Conventions: jax's ``cost_analysis()`` on an SPMD-partitioned module reports
+*per-device* FLOPs/bytes, so terms divide by 1 (already per chip); the
+collective bytes sum the output shapes of the partitioned program's
+collectives (per-device traffic across all links of that device).
+
+MODEL_FLOPS = 6*N_active*D tokens (train: x3 fwd+bwd is folded into the 6;
+decode/prefill use 2*N_active per token) + exact attention term; the ratio
+MODEL_FLOPS / (HLO_FLOPs x chips) flags remat/redundancy/dispatch waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful-FLOPs for the whole step (all chips)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    counts = cfg.param_counts()
+    n_active = counts["active"]
+    hd = cfg.resolved_head_dim
+
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        base = 4 * n_active * tokens  # fwd(2N) + PEFT bwd(~2N)
+        attn_ctx = shape.seq_len / 2
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        base = 2 * n_active * tokens
+        attn_ctx = shape.seq_len / 2
+    else:  # decode: one token against a seq_len cache
+        tokens = shape.global_batch * 1
+        base = 2 * n_active * tokens
+        attn_ctx = shape.seq_len
+
+    # attention score+value FLOPs over the causal context
+    n_attn_layers = sum(
+        1 for l in range(cfg.num_layers)
+        if cfg.family != "ssm" and cfg.is_attention_layer(l)
+    )
+    window = cfg.sliding_window
+    ctx = min(attn_ctx, window) if window else attn_ctx
+    attn = 4 * tokens * ctx * cfg.num_heads * hd * n_attn_layers
+    if shape.kind == "train":
+        attn *= 2  # backward recomputes/differentiates attention
+    return base + attn
+
+
+def memory_lower_bound(arch: str, shape_name: str, chips: int, tp: int = 16) -> float:
+    """Analytic minimum HBM traffic per device per step [bytes].
+
+    ``cost_analysis()['bytes accessed']`` on the CPU backend counts every
+    unfused op's operands — a large over-estimate of TPU traffic after
+    fusion.  The floor is: every live parameter read once per pass, each
+    activation written+read once, plus KV-cache/logits IO.  The truth lies
+    in [lb, ub]; the dominant-term call uses the lb (achievable on TPU).
+    """
+    from repro.federated.system_model import SystemModel
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    sm = SystemModel(cfg)
+    dtype_b = 2
+    params_dev = cfg.param_counts()["total"] * 4 / tp  # fp32 master weights
+    data_shards = chips // tp
+    act_tok = sm.activation_bytes_per_token()
+
+    if shape.kind == "train":
+        tokens_dev = shape.global_batch * shape.seq_len / data_shards
+        traffic = 3 * params_dev + 2 * act_tok * tokens_dev
+        traffic += 3 * tokens_dev * cfg.vocab_size / tp * dtype_b  # logits io
+    elif shape.kind == "prefill":
+        tokens_dev = shape.global_batch * shape.seq_len / data_shards
+        traffic = params_dev + act_tok * tokens_dev / 4  # stream, no bwd save
+        hd = cfg.resolved_head_dim
+        traffic += tokens_dev * 2 * cfg.num_kv_heads * hd * cfg.num_layers * dtype_b
+    else:  # decode: read all params + the KV cache once per token
+        b_dev = max(shape.global_batch // data_shards, 1)
+        hd = cfg.resolved_head_dim
+        window = cfg.sliding_window
+        ctx = min(shape.seq_len, window) if window else shape.seq_len
+        n_attn = sum(
+            1 for l in range(cfg.num_layers)
+            if cfg.family != "ssm" and cfg.is_attention_layer(l)
+        )
+        cache = b_dev * ctx * 2 * cfg.num_kv_heads * hd * n_attn * dtype_b
+        if shape.global_batch == 1:
+            cache /= data_shards  # sequence-sharded cache (long_500k)
+        traffic = params_dev + cache
+    return float(traffic)
+
+
+def load_records(dryrun_dir: str = "results/dryrun", tag_filter: str = ""):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if tag_filter and r.get("tags", "") != tag_filter:
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline_row(rec: dict) -> dict:
+    chips = rec.get("chips", 256)
+    flops_dev = rec["flops"]                   # per-device (see module doc)
+    bytes_dev = rec["bytes_accessed"]
+    coll_dev = rec["collectives"]["total"]
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory_ub = bytes_dev / HBM_BW
+    t_memory_lb = memory_lower_bound(rec["arch"], rec["shape"], chips) / HBM_BW
+    t_coll = coll_dev / ICI_BW_PER_LINK
+    # dominant term uses the achievable (post-fusion) memory estimate
+    dom = max(
+        (("compute", t_compute), ("memory", t_memory_lb), ("collective", t_coll)),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    ratio = mf / max(flops_dev * chips, 1.0)
+    if rec.get("stack_mode", "unroll") != "unroll":
+        # scan/group lowering: cost_analysis counts the loop body once, so
+        # the useful-ratio is not meaningful (multi-pod cells prove sharding,
+        # not cost accounting — DESIGN.md §8)
+        ratio = float("nan")
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "stld": rec.get("stld_mode", "off"),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory_lb,
+        "t_memory_ub_s": t_memory_ub,
+        "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops": mf,
+        "hlo_flops_total": flops_dev * chips,
+        "useful_ratio": ratio,
+        "peak_gib": rec["memory"]["peak_bytes"] / 2**30,
+        "resident_gib": rec["memory"]["argument_bytes"] / 2**30,
+    }
+
+
+def run(quick: bool = False):
+    recs = [r for r in load_records() if r.get("ok")]
+    if not recs:
+        print("roofline/no_dryrun_artifacts,0.0,run launch/dryrun first")
+        return
+    for rec in recs:
+        row = roofline_row(rec)
+        print(
+            f"roofline/{row['arch']}/{row['shape']}/{row['mesh']}"
+            f"{'/stld-' + row['stld'] if row['stld'] != 'off' else ''},"
+            f"{max(row['t_compute_s'], row['t_memory_s'], row['t_collective_s'])*1e6:.1f},"
+            f"compute={row['t_compute_s']:.2e};memory={row['t_memory_s']:.2e};"
+            f"memory_ub={row['t_memory_ub_s']:.2e};"
+            f"collective={row['t_collective_s']:.2e};dominant={row['dominant']};"
+            f"useful={row['useful_ratio']:.2f};peak_gib={row['peak_gib']:.2f}"
+        )
+
+
+def markdown_table(dryrun_dir: str = "results/dryrun") -> str:
+    rows = [roofline_row(r) for r in load_records(dryrun_dir) if r.get("ok")]
+    out = [
+        "| arch | shape | mesh | stld | compute (s) | memory lb (s) | memory ub (s) | collective (s) | dominant | useful ratio | resident GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['stld']} "
+            f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} | {r['t_memory_ub_s']:.2e} "
+            f"| {r['t_collective_s']:.2e} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} | {r['resident_gib']:.2f} |"
+        )
+    return "\n".join(out)

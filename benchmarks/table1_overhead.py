@@ -1,0 +1,46 @@
+"""Paper Table 1: per-round communication / computation / memory per device.
+
+Analytic system model at the paper's scale (a ~1.5-2B LLM on a Jetson AGX
+with 40 Mbps links).  Validates the paper's claims that (a) PEFT removes
+>95% of communication but little compute/memory, and (b) DropPEFT (STLD at
+the recommended 0.5 mean rate + PTLS half-sharing) cuts computation and
+memory on top.
+"""
+from __future__ import annotations
+
+from benchmarks.common import cost_model_cfg, emit
+from repro.configs import PEFTConfig
+from repro.federated.system_model import SystemModel
+
+
+def run(quick: bool = False):
+    cfg = cost_model_cfg()
+    lora = PEFTConfig(method="lora", lora_rank=8)
+    sm = SystemModel(cfg, lora)
+    common = dict(device="agx", bandwidth_mbps=40.0, batch=16, seq=128, local_steps=32)
+
+    rows = {
+        "fft": sm.round_cost(peft=False, full_ft=True, **common),
+        "peft_lora": sm.round_cost(peft=True, **common),
+        "droppeft": sm.round_cost(peft=True, active_fraction=0.5, share_fraction=0.5, **common),
+    }
+    adapter = SystemModel(cfg, PEFTConfig(method="adapter", adapter_dim=64))
+    rows["peft_adapter"] = adapter.round_cost(peft=True, **common)
+
+    for name, c in rows.items():
+        emit(
+            f"table1/{name}",
+            c.total_time_s * 1e6,
+            f"comm_min={c.comm_time_s/60:.2f};comp_min={c.compute_time_s/60:.2f};mem_gb={c.memory_gb:.1f};traffic_mb={c.traffic_mb:.0f}",
+        )
+
+    # paper-claim checks (directional)
+    assert rows["peft_lora"].comm_time_s < 0.05 * rows["fft"].comm_time_s, "PEFT kills >95% comm"
+    peft_saving = 1 - rows["peft_lora"].memory_gb / rows["fft"].memory_gb
+    assert peft_saving < 0.60, f"PEFT memory saving is limited (got {peft_saving:.2f})"
+    assert rows["droppeft"].compute_time_s < 0.75 * rows["peft_lora"].compute_time_s, (
+        "STLD at rate 0.5 must cut compute substantially"
+    )
+    mem_saving = 1 - rows["droppeft"].memory_gb / rows["peft_lora"].memory_gb
+    assert 0.30 < mem_saving, f"DropPEFT memory saving {mem_saving:.2f} (paper: 40-67%)"
+    emit("table1/droppeft_mem_saving_vs_peft", 0.0, f"fraction={mem_saving:.2f}")

@@ -1,0 +1,40 @@
+"""The online dropout-rate configurator (paper Algorithm 1) in isolation.
+
+Simulates an environment where reward = accuracy-gain/time peaks at a
+"sweet spot" dropout rate that DRIFTS over time (paper Fig. 7), and shows
+the bandit tracking it.
+
+    PYTHONPATH=src python examples/bandit_configurator.py
+"""
+import numpy as np
+
+from repro.core.configurator import OnlineConfigurator
+
+rng = np.random.default_rng(0)
+cfgor = OnlineConfigurator(
+    rate_grid=(0.1, 0.3, 0.5, 0.7, 0.9),
+    startup=(0.3, 0.5, 0.7),
+    num_candidates=3,
+    explore_rate=0.34,
+    explore_interval=4,
+    window_size=6,
+)
+
+
+def sweet_spot(round_idx: int) -> float:
+    # early training tolerates aggressive dropout; later rounds need more depth
+    return 0.7 if round_idx < 20 else 0.3
+
+
+for rnd in range(40):
+    rates = cfgor.next_round(n_devices=4)
+    spot = sweet_spot(rnd)
+    gains = [max(0.0, 0.05 - 0.08 * (r - spot) ** 2 + 0.004 * rng.standard_normal()) for r in rates]
+    times = [1.0 - 0.5 * r for r in rates]  # higher dropout -> faster rounds
+    cfgor.report(rates, gains, times)
+    if rnd % 5 == 0:
+        phase = "explore" if cfgor.is_explore else "exploit"
+        print(f"round {rnd:2d} [{phase:7s}] spot={spot:.1f} best_arm={cfgor.best_rate():.1f} "
+              f"used={sorted(set(rates))}")
+
+print("\nfinal best arm:", cfgor.best_rate(), "(sweet spot moved 0.7 -> 0.3)")

@@ -1,0 +1,84 @@
+"""Pytree checkpointing: npz payload + json manifest (no external deps).
+
+Layout: ``<dir>/step_<n>/manifest.json`` + ``arrays.npz``.  Leaves are
+addressed by their flattened key-path string, so any nested dict/list/tuple
+pytree round-trips exactly (structure + dtypes + shapes).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(tree: Any, directory: str, step: int) -> str:
+    out_dir = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(out_dir, exist_ok=True)
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    manifest = {"step": step, "leaves": []}
+    for i, (path, leaf) in enumerate(leaves_with_paths):
+        key = f"leaf_{i}"
+        arr = np.asarray(leaf)
+        dtype_name = str(arr.dtype)
+        if dtype_name == "bfloat16":  # numpy npz cannot hold bf16: store bits
+            arr = arr.view(np.uint16)
+        arrays[key] = arr
+        manifest["leaves"].append({"key": key, "path": _path_str(path), "dtype": dtype_name})
+    treedef = jax.tree.structure(tree)
+    manifest["treedef"] = str(treedef)
+    np.savez(os.path.join(out_dir, "arrays.npz"), **arrays)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return out_dir
+
+
+def load_pytree(template: Any, checkpoint_dir: str) -> Any:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    with open(os.path.join(checkpoint_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(checkpoint_dir, "arrays.npz"))
+    import ml_dtypes
+
+    leaves = []
+    for entry in manifest["leaves"]:
+        arr = data[entry["key"]]
+        if entry["dtype"] == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        leaves.append(arr)
+    treedef = jax.tree.structure(template)
+    restored = jax.tree.unflatten(treedef, leaves)
+    # preserve template dtypes (e.g. bf16 params stored as their numpy repr)
+    return jax.tree.map(lambda t, r: jax.numpy.asarray(r, dtype=t.dtype), template, restored)
+
+
+def restore_latest(template: Any, directory: str) -> Optional[tuple]:
+    """(tree, step) from the newest ``step_*`` subdir, or None."""
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m:
+            steps.append(int(m.group(1)))
+    if not steps:
+        return None
+    step = max(steps)
+    tree = load_pytree(template, os.path.join(directory, f"step_{step:08d}"))
+    return tree, step

@@ -1,0 +1,293 @@
+"""Configuration system for repro.
+
+Every assigned architecture is described by a single :class:`ModelConfig`
+dataclass.  Configs are plain data — no jax imports — so they can be loaded
+by launchers before device initialisation (important for the dry-run, which
+must set XLA_FLAGS before jax is touched).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    """Selective-SSM (Mamba) block hyper-parameters (used by hybrid archs)."""
+
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+    def resolved_dt_rank(self, d_model: int) -> int:
+        return self.dt_rank if self.dt_rank > 0 else max(1, -(-d_model // 16))
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    """RWKV6 ("Finch") block hyper-parameters."""
+
+    head_dim: int = 64
+    decay_lora_dim: int = 64
+    gate_lora_dim: int = 128
+    token_shift_lora_dim: int = 32
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description.
+
+    ``family`` is one of ``dense | moe | hybrid | ssm | vlm | audio``.
+    """
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    # -- attention ---------------------------------------------------------
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None  # tokens; None = global attention
+    rope_theta: float = 10_000.0
+    attention_bias: bool = False
+
+    # -- MoE ---------------------------------------------------------------
+    num_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1          # a layer l hosts MoE iff l % moe_every == moe_offset
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    shared_expert: bool = False  # granite-style shared dense path alongside MoE
+    moe_dispatch: str = "einsum"  # einsum (GShard one-hot) | gather (permutation)
+
+    # -- hybrid (Jamba) ----------------------------------------------------
+    attn_every: int = 0         # 0 = every layer is attention (pure transformer)
+    attn_offset: int = 0        # jamba: attention at l % attn_every == attn_offset
+    mamba: Optional[MambaConfig] = None
+
+    # -- SSM (RWKV) --------------------------------------------------------
+    rwkv: Optional[RWKVConfig] = None
+
+    # -- encoder/decoder + modality frontends ------------------------------
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    modality: str = "text"      # text | audio | vision
+    frontend_seq: int = 0       # frames (audio) / patches (vision) provided by stub
+
+    # -- misc ---------------------------------------------------------------
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    max_seq_len: int = 8192
+    activation: str = "silu"    # silu (SwiGLU) | gelu (plain MLP, whisper)
+    dtype: str = "bfloat16"     # activation/compute dtype
+    param_dtype: str = "float32"
+
+    # ------------------------------------------------------------------ api
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim > 0 else self.d_model // self.num_heads
+
+    def is_attention_layer(self, l: int) -> bool:
+        if self.attn_every <= 0:
+            return True
+        return l % self.attn_every == self.attn_offset
+
+    def is_moe_layer(self, l: int) -> bool:
+        if self.num_experts <= 0:
+            return False
+        return l % self.moe_every == self.moe_offset
+
+    @property
+    def layer_period(self) -> int:
+        """Smallest period after which the layer pattern repeats."""
+        p = 1
+        if self.attn_every > 0:
+            p = _lcm(p, self.attn_every)
+        if self.num_experts > 0:
+            p = _lcm(p, self.moe_every)
+        return p
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # parameter counting (for roofline MODEL_FLOPS and the system model) ----
+    def param_counts(self) -> dict:
+        """Analytic parameter counts: total, active (MoE top-k), embedding."""
+        d, hd = self.d_model, self.resolved_head_dim
+        h, kv, ff = self.num_heads, self.num_kv_heads, self.d_ff
+        attn = d * (h * hd) + 2 * d * (kv * hd) + (h * hd) * d
+        if self.activation == "silu":
+            mlp = 3 * d * ff
+        else:
+            mlp = 2 * d * ff
+        norms = 2 * d
+
+        mamba_p = 0
+        if self.mamba is not None:
+            m = self.mamba
+            d_in = m.expand * d
+            dtr = m.resolved_dt_rank(d)
+            mamba_p = (
+                d * 2 * d_in            # in_proj
+                + d_in * m.d_conv       # conv
+                + d_in * (dtr + 2 * m.d_state)  # x_proj
+                + dtr * d_in            # dt_proj
+                + d_in * m.d_state      # A_log
+                + d_in                  # D
+                + d_in * d              # out_proj
+            )
+        rwkv_p = 0
+        if self.rwkv is not None:
+            r = self.rwkv
+            rwkv_p = (
+                4 * d * d               # r,k,v,output (time-mix)
+                + d * r.gate_lora_dim + r.gate_lora_dim * d
+                + d * r.decay_lora_dim + r.decay_lora_dim * d
+                + 2 * (d * r.token_shift_lora_dim * 5)
+                + (d * ff + ff * d + d * d)  # channel mix: key/value/receptance
+            )
+
+        total = 0
+        active = 0
+        for l in range(self.num_layers):
+            if self.family == "ssm":
+                layer_tot = rwkv_p + norms
+                layer_act = layer_tot
+            elif self.is_attention_layer(l):
+                layer_tot = attn + norms
+                layer_act = attn + norms
+            else:
+                layer_tot = mamba_p + norms
+                layer_act = layer_tot
+            if self.family != "ssm":
+                if self.is_moe_layer(l):
+                    layer_tot += self.num_experts * mlp + d * self.num_experts
+                    layer_act += max(self.top_k, 1) * mlp + d * self.num_experts
+                    if self.shared_expert:
+                        layer_tot += mlp
+                        layer_act += mlp
+                else:
+                    layer_tot += mlp
+                    layer_act += mlp
+            total += layer_tot
+            active += layer_act
+
+        emb = self.vocab_size * d
+        total += emb + d + (0 if self.tie_embeddings else emb)
+        active += emb + d + (0 if self.tie_embeddings else emb)
+        if self.is_encoder_decoder:
+            enc_layer = attn + mlp + norms
+            total += self.num_encoder_layers * enc_layer
+            active += self.num_encoder_layers * enc_layer
+            # decoder cross-attention
+            total += self.num_layers * attn
+            active += self.num_layers * attn
+        return {"total": total, "active": active, "embedding": emb}
+
+
+def _lcm(a: int, b: int) -> int:
+    import math
+
+    return a * b // math.gcd(a, b)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    """One of the four assigned workload shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class PEFTConfig:
+    """Parameter-efficient fine-tuning configuration (paper §2.2)."""
+
+    method: str = "lora"        # lora | adapter | bitfit | none
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+    lora_targets: tuple = ("q", "v")  # which projections get LoRA
+    adapter_dim: int = 64
+
+
+@dataclass(frozen=True)
+class STLDConfig:
+    """Stochastic transformer layer dropout configuration (paper §3.2-3.3)."""
+
+    enabled: bool = True
+    mode: str = "cond"            # cond (paper-faithful) | gather (TPU-native)
+    distribution: str = "incremental"  # uniform | decay | incremental | normal
+    mean_rate: float = 0.5
+    normal_std: float = 0.1
+    min_active_layers: int = 1
+    # gather-mode: static active count = round(L * (1 - mean_rate)), bucketed
+    gather_bucket: int = 4
+
+
+@dataclass(frozen=True)
+class FederatedConfig:
+    """Federated fine-tuning round configuration (paper §6.1)."""
+
+    num_devices: int = 100
+    devices_per_round: int = 10
+    local_epochs: int = 1
+    local_steps: int = 4
+    batch_size: int = 16
+    rounds: int = 100
+    dirichlet_alpha: float = 1.0
+    target_accuracy: float = 0.9
+    # PTLS
+    ptls_enabled: bool = True
+    ptls_share_fraction: float = 0.5  # k = fraction * L layers shared
+    # bandit configurator
+    configurator_enabled: bool = True
+    explore_rate: float = 0.3
+    explore_interval: int = 5
+    num_candidates: int = 4
+    window_size: int = 8
+    rate_grid: tuple = (0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9)
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Optimizer / schedule."""
+
+    learning_rate: float = 2e-4
+    weight_decay: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 20
+    schedule: str = "cosine"  # cosine | linear | constant
+    total_steps: int = 1000
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Top-level bundle handed to launchers."""
+
+    model: ModelConfig
+    peft: PEFTConfig = field(default_factory=PEFTConfig)
+    stld: STLDConfig = field(default_factory=STLDConfig)
+    federated: FederatedConfig = field(default_factory=FederatedConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)

@@ -1,0 +1,11 @@
+"""DropPEFT core: the paper's contribution as composable JAX modules.
+
+- ``stld``         — stochastic transformer layer dropout (paper §3.2)
+- ``schedules``    — per-layer dropout-rate distributions (paper Fig. 6b)
+- ``configurator`` — online bandit for dropout-rate configs (paper §3.3, Alg. 1)
+- ``peft``         — LoRA / Adapter / BitFit param partitioning (paper §2.2)
+- ``ptls``         — personalized transformer layer sharing (paper §4)
+"""
+from repro.core import configurator, peft, ptls, schedules, stld
+
+__all__ = ["configurator", "peft", "ptls", "schedules", "stld"]

@@ -1,0 +1,137 @@
+"""Online exploration-exploitation configurator for dropout rates.
+
+Faithful implementation of the paper's Algorithm 1 as a host-side (numpy)
+multi-armed bandit over *discretized* dropout-rate configurations:
+
+* the action space is narrowed per §3.3: a preset per-layer distribution
+  shape (default ``incremental``) plus a discrete grid of average rates,
+  so an "arm" is the scalar mean rate;
+* reward of an arm = accuracy gain per unit wall-clock time, R = dA / T
+  (Eq. 5), averaged over the devices that evaluated it;
+* phases alternate: one EXPLORATION sweep evaluates every candidate in
+  ``list_c`` (start-up list + ``n*eps`` random arms), keeps the top
+  ``n*(1-eps)`` by reward within a sliding window of the latest ``size_w``
+  evaluations, then EXPLOITATION reuses the best-known arm for
+  ``explore_interval`` rounds.
+
+The object is deliberately pure-python: it sits next to the federated
+server loop and never enters a jit trace.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+
+_ARM_MEMORY = 3  # recent evaluations kept per arm (staleness, paper Line 12)
+
+
+@dataclass
+class ArmStats:
+    rate: float
+    rewards: List[float] = field(default_factory=list)
+    last_eval: int = -1  # round index of last evaluation (staleness)
+
+    def add(self, r: float):
+        self.rewards.append(r)
+        del self.rewards[:-_ARM_MEMORY]  # keep only recent evidence
+
+    @property
+    def reward(self) -> float:
+        if not self.rewards:
+            return float("-inf")
+        return sum(self.rewards) / len(self.rewards)
+
+
+class OnlineConfigurator:
+    """Algorithm 1.  ``next_round()`` -> list of mean rates (one per device);
+    ``report(rates, acc_gains, times)`` feeds back rewards."""
+
+    def __init__(
+        self,
+        rate_grid: Sequence[float] = (0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9),
+        startup: Sequence[float] = (0.2, 0.5, 0.7),
+        num_candidates: int = 4,
+        explore_rate: float = 0.3,
+        explore_interval: int = 5,
+        window_size: int = 8,
+        seed: int = 0,
+    ):
+        self.rate_grid = list(rate_grid)
+        self.num_candidates = num_candidates
+        self.explore_rate = explore_rate
+        self.explore_interval = explore_interval
+        self.window_size = window_size
+        self._rng = random.Random(seed)
+        self.arms: Dict[float, ArmStats] = {}
+        self.list_c: List[float] = [r for r in startup]  # candidate queue
+        self.history: List[float] = []  # evaluation order (for staleness)
+        self.is_explore = True
+        self._exploit_rounds_left = 0
+        self._round = 0
+
+    # ------------------------------------------------------------------ api
+    def next_round(self, n_devices: int) -> List[float]:
+        """Dropout mean-rates for this round's cohort."""
+        if self.is_explore:
+            if not self.list_c:
+                self._refill_candidates()
+            # evaluate candidates in parallel across the cohort: round-robin
+            rates = [self.list_c[i % len(self.list_c)] for i in range(n_devices)]
+        else:
+            rates = [self.best_rate()] * n_devices
+        self._pending = sorted(set(rates))
+        return rates
+
+    def report(self, rates: Sequence[float], acc_gains: Sequence[float], times: Sequence[float]):
+        """Per-device rewards R = dA / T (Eq. 5)."""
+        self._round += 1
+        for r, da, t in zip(rates, acc_gains, times):
+            arm = self.arms.setdefault(r, ArmStats(rate=r))
+            arm.add(da / max(t, 1e-9))
+            arm.last_eval = self._round
+            self.history.append(r)
+        # sliding window: discard overly stale arms (Line 12)
+        recent = set(self.history[-self.window_size * max(1, len(self._pending)) :])
+        for r in list(self.arms):
+            if r not in recent and self.arms[r].last_eval < self._round - self.window_size:
+                del self.arms[r]
+
+        if self.is_explore:
+            for r in self._pending:
+                if r in self.list_c:
+                    self.list_c.remove(r)
+            if not self.list_c:  # exploration sweep finished -> exploit winner
+                self._keep_top_candidates()
+                self.is_explore = False
+                self._exploit_rounds_left = self.explore_interval
+        else:
+            self._exploit_rounds_left -= 1
+            if self._exploit_rounds_left <= 0:
+                self.is_explore = True
+                self._refill_candidates()
+
+    def best_rate(self) -> float:
+        if not self.arms:
+            return 0.5
+        return max(self.arms.values(), key=lambda a: a.reward).rate
+
+    # ------------------------------------------------------------- internals
+    def _refill_candidates(self):
+        n_explore = max(1, int(self.num_candidates * self.explore_rate))
+        fresh = [r for r in self.rate_grid if r not in self.arms]
+        self._rng.shuffle(fresh)
+        new = fresh[:n_explore]
+        if not new:  # grid exhausted: resample anywhere
+            new = [self._rng.choice(self.rate_grid) for _ in range(n_explore)]
+        top = self._top_rates(self.num_candidates - len(new))
+        self.list_c = list(dict.fromkeys(new + top)) or [0.5]
+
+    def _keep_top_candidates(self):
+        keep = max(1, int(self.num_candidates * (1.0 - self.explore_rate)))
+        self.list_c = self._top_rates(keep)
+
+    def _top_rates(self, k: int) -> List[float]:
+        ranked = sorted(self.arms.values(), key=lambda a: a.reward, reverse=True)
+        return [a.rate for a in ranked[:k]]

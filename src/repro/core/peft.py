@@ -1,0 +1,136 @@
+"""PEFT methods (LoRA / Adapter / BitFit) with frozen-base param partition.
+
+The PEFT tree mirrors the layer list: ``peft[l]`` is a dict consumed by
+``layer_apply``:
+
+* attention layers: ``{"attn": {"q"|"k"|"v"|"o": lora}, "mlp": {...},
+  "adapter_attn", "adapter_mlp"}``
+* mamba layers: ``{"mamba": {"in"|"out": lora}, "adapter_mlp"}``
+* rwkv layers:  ``{"cm": {"up"|"down": lora}, "adapter_mlp"}``
+
+Only the PEFT tree is trainable; the base model is frozen (paper §2.2) —
+the training step takes ``(peft_params, base_params)`` and differentiates
+w.r.t. the first argument only.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import layer_kind
+from repro.nn.linear import init_lora
+from repro.nn.mlp import init_adapter
+
+_ATTN_DIMS = {
+    "q": lambda cfg: (cfg.d_model, cfg.num_heads * cfg.resolved_head_dim),
+    "k": lambda cfg: (cfg.d_model, cfg.num_kv_heads * cfg.resolved_head_dim),
+    "v": lambda cfg: (cfg.d_model, cfg.num_kv_heads * cfg.resolved_head_dim),
+    "o": lambda cfg: (cfg.num_heads * cfg.resolved_head_dim, cfg.d_model),
+}
+_MLP_DIMS = {
+    "gate": lambda cfg: (cfg.d_model, cfg.d_ff),
+    "up": lambda cfg: (cfg.d_model, cfg.d_ff),
+    "down": lambda cfg: (cfg.d_ff, cfg.d_model),
+}
+
+
+def lora_scale(peft_cfg) -> float:
+    return peft_cfg.lora_alpha / peft_cfg.lora_rank
+
+
+def init_layer_peft(key, cfg, peft_cfg, l: int) -> dict:
+    kind = layer_kind(cfg, l)
+    method = peft_cfg.method
+    p: dict = {}
+    if method == "none":
+        return p
+    if method == "adapter":
+        k1, k2 = jax.random.split(key)
+        if kind in ("attn", "encdec"):
+            p["adapter_attn"] = init_adapter(k1, cfg.d_model, peft_cfg.adapter_dim)
+        p["adapter_mlp"] = init_adapter(k2, cfg.d_model, peft_cfg.adapter_dim)
+        return p
+    if method == "bitfit":
+        p["bias_attn"] = jnp.zeros((cfg.d_model,), dtype=jnp.float32)
+        p["bias_mlp"] = jnp.zeros((cfg.d_model,), dtype=jnp.float32)
+        return p
+    if method == "lora":
+        r = peft_cfg.lora_rank
+        keys = iter(jax.random.split(key, 16))
+        if kind in ("attn", "encdec"):
+            attn = {}
+            for t in peft_cfg.lora_targets:
+                if t in _ATTN_DIMS:
+                    d_in, d_out = _ATTN_DIMS[t](cfg)
+                    attn[t] = init_lora(next(keys), d_in, d_out, r)
+            if attn:
+                p["attn"] = attn
+            mlp = {}
+            for t in peft_cfg.lora_targets:
+                if t in _MLP_DIMS and not cfg.is_moe_layer(l):
+                    d_in, d_out = _MLP_DIMS[t](cfg)
+                    mlp[t] = init_lora(next(keys), d_in, d_out, r)
+            if mlp:
+                p["mlp"] = mlp
+            if kind == "encdec":
+                cross = {}
+                for t in peft_cfg.lora_targets:
+                    if t in _ATTN_DIMS:
+                        d_in, d_out = _ATTN_DIMS[t](cfg)
+                        cross[t] = init_lora(next(keys), d_in, d_out, r)
+                if cross:
+                    p["cross"] = cross
+        elif kind == "mamba":
+            d_in_m = cfg.mamba.expand * cfg.d_model
+            p["mamba"] = {
+                "in": init_lora(next(keys), cfg.d_model, 2 * d_in_m, r),
+                "out": init_lora(next(keys), d_in_m, cfg.d_model, r),
+            }
+        elif kind == "rwkv":
+            p["cm"] = {
+                "up": init_lora(next(keys), cfg.d_model, cfg.d_ff, r),
+                "down": init_lora(next(keys), cfg.d_ff, cfg.d_model, r),
+            }
+        return p
+    raise ValueError(f"unknown PEFT method {method!r}")
+
+
+def init_peft(key, cfg, peft_cfg):
+    """Per-layer PEFT tree (list of dicts, index-aligned with layers)."""
+    n = cfg.num_layers
+    keys = jax.random.split(key, n)
+    return [init_layer_peft(keys[l], cfg, peft_cfg, l) for l in range(n)]
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def flat_bytes(tree) -> int:
+    return sum(int(x.size * x.dtype.itemsize) for x in jax.tree.leaves(tree))
+
+
+def merge_lora_into_base(base_layers, peft, scale: float):
+    """Fold LoRA deltas into the frozen weights (deployment path):
+    W' = W + scale * A @ B.  Returns new base layer list."""
+    merged = []
+    _map = {
+        "q": ("attn", "wq"),
+        "k": ("attn", "wk"),
+        "v": ("attn", "wv"),
+        "o": ("attn", "wo"),
+        "gate": ("mlp", "gate"),
+        "up": ("mlp", "up"),
+        "down": ("mlp", "down"),
+    }
+    for layer, p in zip(base_layers, peft):
+        layer = jax.tree.map(lambda x: x, layer)  # shallow copy
+        for group in ("attn", "mlp"):
+            for t, lora in (p.get(group) or {}).items():
+                mod, name = _map[t]
+                w = layer[mod][name]["w"]
+                layer[mod][name]["w"] = w + scale * (lora["a"] @ lora["b"]).astype(w.dtype)
+        merged.append(layer)
+    return merged

@@ -1,0 +1,91 @@
+"""Personalized Transformer Layer Sharing (PTLS) — paper §4.
+
+Per-layer importance (Eq. 6): the STLD-masked average gradient norm
+
+    I_l = (1 / sum_b (1 - d_l^b)) * sum_b g_l^b (1 - d_l^b)
+
+High-I_l layers are *personalized* (kept local); each device uploads the k
+layers with the LOWEST importance.  The server averages only overlapping
+layers (Fig. 8): for layer l, new_global_l = mean over devices sharing l;
+layers shared by no device keep the previous global value.
+
+Everything here is expressed with masked means so it lowers to plain
+``psum``-style reductions when run under ``shard_map`` across a device
+cohort axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def layer_grad_norms(peft_grads_per_layer) -> jnp.ndarray:
+    """L2 norm of each layer's PEFT gradient.  Input: list (len L) of pytrees."""
+    norms = []
+    for g in peft_grads_per_layer:
+        leaves = jax.tree.leaves(g)
+        if not leaves:
+            norms.append(jnp.zeros((), dtype=jnp.float32))
+            continue
+        sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+        norms.append(jnp.sqrt(sq))
+    return jnp.stack(norms)
+
+
+class ImportanceAccumulator:
+    """Running Eq.-6 accumulator over the local batches of one round."""
+
+    @staticmethod
+    def init(num_layers: int):
+        return {
+            "g_sum": jnp.zeros((num_layers,), dtype=jnp.float32),
+            "count": jnp.zeros((num_layers,), dtype=jnp.float32),
+        }
+
+    @staticmethod
+    def update(state, grad_norms, drops):
+        active = 1.0 - drops.astype(jnp.float32)
+        return {
+            "g_sum": state["g_sum"] + grad_norms * active,
+            "count": state["count"] + active,
+        }
+
+    @staticmethod
+    def importance(state):
+        return state["g_sum"] / jnp.maximum(state["count"], 1.0)
+
+
+def shared_layer_mask(importance, k: int) -> jnp.ndarray:
+    """(L,) bool — True for the k lowest-importance (shared) layers."""
+    num_layers = importance.shape[0]
+    k = min(k, num_layers)
+    order = jnp.argsort(importance)  # ascending: least important first
+    mask = jnp.zeros((num_layers,), dtype=bool)
+    return mask.at[order[:k]].set(True)
+
+
+def masked_layer_mean(updates, masks, prev_global):
+    """Heterogeneous aggregation (paper Fig. 8).
+
+    updates: per-device list/stacked pytree-of-layers deltas,
+             stacked along a leading device axis: list (len L) of pytrees
+             whose leaves have shape (N, ...).
+    masks:   (N, L) bool — device n shares layer l.
+    prev_global: list (len L) of pytrees (no device axis).
+
+    Returns the new global per-layer list.
+    """
+    num_layers = len(prev_global)
+    out = []
+    for l in range(num_layers):
+        m = masks[:, l].astype(jnp.float32)  # (N,)
+        denom = jnp.sum(m)
+        has_any = denom > 0
+
+        def avg(leaf_upd, leaf_prev):
+            w = m.reshape((-1,) + (1,) * (leaf_upd.ndim - 1))
+            mean = jnp.sum(leaf_upd * w, axis=0) / jnp.maximum(denom, 1.0)
+            return jnp.where(has_any, mean.astype(leaf_prev.dtype), leaf_prev)
+
+        out.append(jax.tree.map(avg, updates[l], prev_global[l]))
+    return out

@@ -1,0 +1,60 @@
+"""Per-layer dropout-rate distributions (paper §3.3, Fig. 6b).
+
+Each distribution maps (mean_rate, L) -> per-layer rates P_l in [0, 1).
+The paper recommends ``incremental`` (P_l grows with depth: early layers
+extract low-level features consumed by later layers, so they are preserved
+more reliably).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_MAX_RATE = 0.95
+
+
+def drop_rates(
+    distribution: str,
+    mean_rate: float,
+    num_layers: int,
+    *,
+    normal_std: float = 0.1,
+    key=None,
+):
+    """Per-layer dropout rates with the requested mean and shape."""
+    ell = jnp.arange(1, num_layers + 1, dtype=jnp.float32)
+    if distribution == "uniform":
+        rates = jnp.full((num_layers,), mean_rate, dtype=jnp.float32)
+    elif distribution == "incremental":
+        # paper: P_l = l/(L+1); generalised to arbitrary mean by scaling
+        base = ell / (num_layers + 1)
+        rates = base * (mean_rate / jnp.mean(base))
+    elif distribution == "decay":
+        base = 1.0 - ell / (num_layers + 1)
+        rates = base * (mean_rate / jnp.mean(base))
+    elif distribution == "normal":
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        rates = mean_rate + normal_std * jax.random.normal(key, (num_layers,))
+    else:
+        raise ValueError(f"unknown dropout distribution {distribution!r}")
+    return jnp.clip(rates, 0.0, _MAX_RATE)
+
+
+def unit_shape(distribution: str, num_layers: int, *, normal_std: float = 0.1, key=None):
+    """Unclipped per-layer shape with mean 1.0; multiply by a (possibly
+    traced) mean rate and clip to get the round's rates."""
+    ell = jnp.arange(1, num_layers + 1, dtype=jnp.float32)
+    if distribution == "uniform":
+        return jnp.ones((num_layers,), dtype=jnp.float32)
+    if distribution == "incremental":
+        base = ell / (num_layers + 1)
+    elif distribution == "decay":
+        base = 1.0 - ell / (num_layers + 1)
+    elif distribution == "normal":
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        base = jnp.clip(1.0 + normal_std * jax.random.normal(key, (num_layers,)), 0.05, None)
+    else:
+        raise ValueError(f"unknown dropout distribution {distribution!r}")
+    return base / jnp.mean(base)

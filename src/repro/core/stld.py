@@ -1,0 +1,109 @@
+"""Stochastic Transformer Layer Dropout (STLD) — paper §3.2.
+
+``H_{l+1} = (1 - d_l) · Block_l(H_l) + d_l · H_l``, ``d_l ~ Bernoulli(P_l)``.
+
+Two execution modes (DESIGN.md §2):
+
+* ``cond``   — paper-faithful: a traced ``lax.cond`` per layer.  One compiled
+  graph; at runtime XLA executes only the taken branch, so a dropped layer
+  costs neither forward nor backward compute.  Per-batch dynamic, exactly the
+  paper's semantics.
+* ``gather`` — TPU-native (beyond paper): a *static* active-layer count
+  ``k = round(L · (1 - mean_rate))`` with *traced* active indices.  Stacked
+  layer params are gathered (``jnp.take``) into a shorter stack and scanned;
+  the compiled graph itself has ``k/L`` of the FLOPs and activation footprint.
+  Gradients scatter back through the gather, so dropped layers receive exact
+  zero updates — numerically identical in expectation to ``cond`` when the
+  index distribution matches.
+
+``sample_drops`` draws the paper's independent Bernoulli gates (with a
+guaranteed minimum number of active layers); ``sample_active_indices`` draws a
+fixed-size active set with inclusion probabilities proportional to
+``1 - P_l`` (Gumbel top-k weighted sampling without replacement), the
+gather-mode analogue.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def expected_active_layers(rates) -> jnp.ndarray:
+    """E[L-tilde] = sum_l (1 - P_l)   (paper Eq. 4)."""
+    return jnp.sum(1.0 - rates)
+
+
+def sample_drops(key, rates, min_active: int = 1):
+    """Independent Bernoulli gates d_l (True = dropped), with a floor on the
+    number of active layers: if fewer than ``min_active`` layers survive,
+    the lowest-rate layers are force-activated."""
+    num_layers = rates.shape[0]
+    u = jax.random.uniform(key, (num_layers,))
+    drops = u < rates
+    active = jnp.sum(~drops)
+    need = jnp.maximum(min_active - active, 0)
+    # force-activate the `need` dropped layers with the smallest rates
+    order = jnp.argsort(jnp.where(drops, rates, jnp.inf))
+    rank_of = jnp.argsort(order)
+    force = drops & (rank_of < need)
+    return drops & ~force
+
+
+def sample_active_indices(key, rates, k: int):
+    """Gather-mode: sample k distinct layer indices with probability
+    proportional to keep-probability (Gumbel top-k), returned sorted so the
+    gathered sub-stack preserves depth order."""
+    logits = jnp.log(jnp.clip(1.0 - rates, 1e-6, 1.0))
+    g = logits + jax.random.gumbel(key, rates.shape)
+    _, idx = jax.lax.top_k(g, k)
+    return jnp.sort(idx)
+
+
+def static_active_count(mean_rate: float, num_layers: int, bucket: int = 1, min_active: int = 1) -> int:
+    """Static k for gather mode, rounded up to a bucket to bound recompiles."""
+    k = round(num_layers * (1.0 - mean_rate))
+    if bucket > 1:
+        k = -(-k // bucket) * bucket
+    return int(min(num_layers, max(min_active, k)))
+
+
+def sample_drops_block(key, rates, block_size: int, min_active: int = 1):
+    """Structured (LayerDrop-style) variant: contiguous blocks of
+    ``block_size`` layers share one Bernoulli gate.  Coarser than the
+    paper's per-layer gates but TPU-friendlier in gather mode (gathered
+    sub-stacks stay contiguous); used as an ablation."""
+    num_layers = rates.shape[0]
+    n_blocks = -(-num_layers // block_size)
+    block_rates = jnp.array(
+        [jnp.mean(rates[i * block_size : (i + 1) * block_size]) for i in range(n_blocks)]
+    )
+    block_drops = sample_drops(key, block_rates, min_active=1)
+    drops = jnp.repeat(block_drops, block_size)[:num_layers]
+    active = jnp.sum(~drops)
+    need = jnp.maximum(min_active - active, 0)
+    order = jnp.argsort(jnp.where(drops, rates, jnp.inf))
+    rank_of = jnp.argsort(order)
+    force = drops & (rank_of < need)
+    return drops & ~force
+
+
+def gate(block_fn: Callable, drop, h, cache=None):
+    """The STLD gate: ``lax.cond(drop, identity, block_fn)``.
+
+    ``block_fn(h, cache) -> (h', aux, cache')``; the identity branch passes
+    ``h`` and ``cache`` through with aux = 0, so both branches have identical
+    output structure (required by ``lax.cond``) and a skipped layer stores no
+    activations for the backward pass — XLA executes only the taken branch.
+    """
+
+    def skip_branch(operands):
+        h, cache = operands
+        return h, jnp.zeros((), dtype=jnp.float32), cache
+
+    def active_branch(operands):
+        h, cache = operands
+        return block_fn(h, cache)
+
+    return jax.lax.cond(drop, skip_branch, active_branch, (h, cache))

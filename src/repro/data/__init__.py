@@ -1,0 +1,5 @@
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import SyntheticTask, make_task
+from repro.data.pipeline import DeviceDataset
+
+__all__ = ["dirichlet_partition", "SyntheticTask", "make_task", "DeviceDataset"]

@@ -1,0 +1,10 @@
+from repro.federated.system_model import DEVICE_PROFILES, RoundCost, SystemModel
+from repro.federated.simulator import FederatedSimulator, SimResult
+
+__all__ = [
+    "DEVICE_PROFILES",
+    "RoundCost",
+    "SystemModel",
+    "FederatedSimulator",
+    "SimResult",
+]

@@ -1,0 +1,150 @@
+"""Client-side local fine-tuning with STLD (paper §3.1-3.2).
+
+``make_client_fns`` builds the jit'd per-round programs:
+
+* ``local_round`` — ``lax.scan`` over local mini-batch steps; each step
+  draws fresh STLD gates (Bernoulli per layer, or gather-mode indices),
+  computes PEFT-only grads, AdamW-updates the PEFT tree, and accumulates
+  the Eq.-6 PTLS importance statistics.
+* ``evaluate``   — full-model (no dropout) classification accuracy on the
+  device's local validation split.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import peft as peft_lib
+from repro.core import ptls, stld
+from repro.core.schedules import unit_shape
+from repro.models.losses import softmax_xent
+from repro.models.registry import model_apply
+from repro.optim import adamw_update, clip_by_global_norm, make_lr_schedule
+
+
+def _model_batch(cfg, tokens):
+    batch = {"tokens": tokens}
+    if cfg.modality == "vision":
+        b = tokens.shape[0]
+        batch["patches"] = jnp.zeros((b, cfg.frontend_seq, cfg.d_model), dtype=cfg.dtype)
+    if cfg.modality == "audio":
+        b = tokens.shape[0]
+        batch["frames"] = jnp.zeros((b, cfg.frontend_seq, cfg.d_model), dtype=cfg.dtype)
+    return batch
+
+
+def _logits_for_tokens(cfg, logits, tokens):
+    """Strip any stub-frontend prefix so logits align with token positions."""
+    if cfg.modality == "vision":
+        return logits[:, -tokens.shape[1] :]
+    return logits
+
+
+def make_client_fns(cfg, peft_cfg, stld_cfg, train_cfg, *, stack_mode: str = "unroll"):
+    lora_sc = peft_lib.lora_scale(peft_cfg) if peft_cfg.method == "lora" else 1.0
+    sched = make_lr_schedule(
+        train_cfg.schedule, train_cfg.learning_rate, train_cfg.warmup_steps, train_cfg.total_steps
+    )
+    gather_mode = stld_cfg.mode == "gather"
+
+    def loss_fn(peft_params, base_params, tokens, targets, mask, drops, active_idx):
+        logits, aux, _ = model_apply(
+            base_params,
+            cfg,
+            _model_batch(cfg, tokens),
+            drops=drops,
+            peft=peft_params,
+            lora_scale=lora_sc,
+            stack_mode="gather" if active_idx is not None else stack_mode,
+            active_idx=active_idx,
+        )
+        logits = _logits_for_tokens(cfg, logits, tokens)
+        loss, metrics = softmax_xent(logits, targets, mask)
+        loss = loss + cfg.router_aux_coef * aux
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    @partial(jax.jit, static_argnames=("num_active",))
+    def local_round(
+        base_params,
+        peft_params,
+        opt_state,
+        batches,  # dict of arrays with leading (steps,) dim
+        mean_rate,  # scalar: this round's dropout-rate config (the bandit arm)
+        rng,
+        global_step,
+        num_active: Optional[int] = None,
+    ):
+        shape = unit_shape(stld_cfg.distribution, cfg.num_layers)
+        rates = jnp.clip(shape * mean_rate, 0.0, 0.95)
+        if not stld_cfg.enabled:
+            rates = jnp.zeros((cfg.num_layers,))
+        imp0 = ptls.ImportanceAccumulator.init(cfg.num_layers)
+
+        def step(carry, xs):
+            peft_p, opt, imp, rng, gstep = carry
+            tokens, targets, mask = xs
+            rng, kd = jax.random.split(rng)
+            if gather_mode and num_active is not None:
+                active_idx = stld.sample_active_indices(kd, rates, num_active)
+                drops = None
+                drops_for_imp = jnp.ones((cfg.num_layers,)).at[active_idx].set(0.0)
+            else:
+                drops = stld.sample_drops(kd, rates, stld_cfg.min_active_layers)
+                active_idx = None
+                drops_for_imp = drops.astype(jnp.float32)
+            (loss, metrics), grads = grad_fn(
+                peft_p, base_params, tokens, targets, mask, drops, active_idx
+            )
+            gnorms = ptls.layer_grad_norms(grads)
+            imp = ptls.ImportanceAccumulator.update(imp, gnorms, drops_for_imp)
+            grads, gn = clip_by_global_norm(grads, train_cfg.grad_clip)
+            peft_p, opt = adamw_update(
+                grads,
+                opt,
+                peft_p,
+                lr=sched(gstep),
+                beta1=train_cfg.beta1,
+                beta2=train_cfg.beta2,
+                eps=train_cfg.eps,
+                weight_decay=train_cfg.weight_decay,
+            )
+            out_metrics = {
+                "loss": metrics["loss"],
+                "accuracy": metrics["accuracy"],
+                "grad_norm": gn,
+                "active_layers": jnp.sum(1.0 - drops_for_imp),
+            }
+            return (peft_p, opt, imp, rng, gstep + 1), out_metrics
+
+        xs = (batches["tokens"], batches["targets"], batches["mask"])
+        (peft_params, opt_state, imp, _, _), metrics = jax.lax.scan(
+            step, (peft_params, opt_state, imp0, rng, global_step), xs
+        )
+        metrics = jax.tree.map(jnp.mean, metrics)
+        importance = ptls.ImportanceAccumulator.importance(imp)
+        return peft_params, opt_state, metrics, importance
+
+    @jax.jit
+    def evaluate(base_params, peft_params, tokens, labels, num_classes_arr):
+        """Classification accuracy: argmax over label-token logits at the
+        final position (synthetic task protocol)."""
+        logits, _, _ = model_apply(
+            base_params,
+            cfg,
+            _model_batch(cfg, tokens),
+            peft=peft_params,
+            lora_scale=lora_sc,
+            stack_mode=stack_mode,
+        )
+        logits = _logits_for_tokens(cfg, logits, tokens)
+        final = logits[:, -1].astype(jnp.float32)  # (B, V)
+        class_logits = final[:, 1 : 1 + num_classes_arr.shape[0]]
+        pred = jnp.argmax(class_logits, axis=-1)
+        return jnp.mean((pred == labels).astype(jnp.float32))
+
+    return local_round, evaluate

@@ -1,0 +1,79 @@
+"""Server-side aggregation strategies.
+
+* ``fedavg``            — plain mean of client PEFT trees (FedLoRA/FedAdapter
+                          and the DropPEFT-b3 ablation).
+* ``ptls_aggregate``    — heterogeneous layer aggregation (paper Fig. 8):
+                          per layer, average only the devices that shared it.
+* ``hetlora_aggregate`` — FedHetLoRA baseline: rank-heterogeneous LoRA
+                          updates zero-padded to the max rank then
+                          sparsity-weighted averaged.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ptls
+
+
+def fedavg(client_trees: Sequence) -> object:
+    """Mean over clients of identical pytrees."""
+    return jax.tree.map(lambda *xs: sum(xs) / len(xs), *client_trees)
+
+
+def ptls_aggregate(client_peft: Sequence[List], masks: np.ndarray, global_peft: List) -> List:
+    """client_peft: per-client per-layer PEFT lists; masks: (N, L) bool."""
+    num_layers = len(global_peft)
+    stacked = [
+        jax.tree.map(lambda *xs: jnp.stack(xs), *[c[l] for c in client_peft])
+        for l in range(num_layers)
+    ]
+    return ptls.masked_layer_mean(stacked, jnp.asarray(masks), global_peft)
+
+
+def _pad_lora(lora: dict, rank: int) -> dict:
+    a, b = lora["a"], lora["b"]
+    pa = jnp.pad(a, ((0, 0), (0, rank - a.shape[1])))
+    pb = jnp.pad(b, ((0, rank - b.shape[0]), (0, 0)))
+    return {"a": pa, "b": pb}
+
+
+def hetlora_aggregate(client_peft: Sequence[List], ranks: Sequence[int], max_rank: int) -> List:
+    """FedHetLoRA: zero-pad heterogeneous-rank LoRA factors to ``max_rank``;
+    weight each client by its rank share (sparsity-weighted aggregation)."""
+    weights = np.asarray(ranks, dtype=np.float64)
+    weights = weights / weights.sum()
+    num_layers = len(client_peft[0])
+    out = []
+    for l in range(num_layers):
+        padded = []
+        for c, w in zip(client_peft, weights):
+            layer = c[l]
+            padded.append(
+                jax.tree.map(
+                    lambda x: x,
+                    {
+                        grp: {t: _pad_lora(lora, max_rank) for t, lora in sub.items()}
+                        for grp, sub in layer.items()
+                    },
+                )
+            )
+        agg = jax.tree.map(
+            lambda *xs: sum(w * x for w, x in zip(weights, xs)), *padded
+        )
+        out.append(agg)
+    return out
+
+
+def truncate_lora_rank(peft_layers: List, rank: int) -> List:
+    """Project a max-rank global LoRA tree down to a client's local rank."""
+    def trunc(lora):
+        return {"a": lora["a"][:, :rank], "b": lora["b"][:rank, :]}
+
+    return [
+        {grp: {t: trunc(lora) for t, lora in sub.items()} for grp, sub in layer.items()}
+        for layer in peft_layers
+    ]

@@ -1,0 +1,387 @@
+"""End-to-end federated fine-tuning simulator.
+
+One object runs any of the paper's methods and ablations over the synthetic
+classification task:
+
+    FedLoRA / FedAdapter          — vanilla federated PEFT baselines
+    FedHetLoRA                    — rank-heterogeneous LoRA baseline
+    FedAdaOPT                     — progressive-depth adapter baseline
+    DropPEFT (LoRA | Adapter)     — STLD + bandit configurator + PTLS
+    DropPEFT-b1/b2/b3             — ablations (no STLD / fixed rate / no PTLS)
+
+Wall-clock, memory, energy, and traffic come from the analytic SystemModel
+(Jetson profiles + fluctuating bandwidth), scaled by each round's *measured*
+active-layer fraction — the semi-emulation protocol of paper §6.1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import peft as peft_lib
+from repro.core import ptls
+from repro.core.configurator import OnlineConfigurator
+from repro.data import DeviceDataset, dirichlet_partition, make_task
+from repro.federated import server as server_lib
+from repro.federated.client import make_client_fns
+from repro.federated.system_model import SystemModel, sample_bandwidth, sample_device
+from repro.models.registry import default_stack_mode, init_params
+from repro.optim import adamw_init
+
+
+@dataclass
+class Strategy:
+    """Which paper method/ablation to run."""
+
+    name: str = "droppeft"
+    stld: bool = True
+    configurator: bool = True
+    ptls: bool = True
+    fixed_rate: float = 0.5          # used when configurator is off
+    hetlora: bool = False            # FedHetLoRA baseline
+    hetlora_ranks: tuple = (4, 8, 16)
+    adaopt: bool = False             # FedAdaOPT progressive-depth baseline
+    adaopt_grow_every: int = 5
+
+
+METHODS: Dict[str, Strategy] = {
+    "fedlora": Strategy("fedlora", stld=False, configurator=False, ptls=False),
+    "fedadapter": Strategy("fedadapter", stld=False, configurator=False, ptls=False),
+    "fedhetlora": Strategy(
+        "fedhetlora", stld=False, configurator=False, ptls=False, hetlora=True
+    ),
+    "fedadaopt": Strategy(
+        "fedadaopt", stld=False, configurator=False, ptls=False, adaopt=True
+    ),
+    "droppeft": Strategy("droppeft"),
+    "droppeft_b1": Strategy("droppeft_b1", stld=False),            # w/o STLD
+    "droppeft_b2": Strategy("droppeft_b2", configurator=False),    # fixed rate
+    "droppeft_b3": Strategy("droppeft_b3", ptls=False),            # w/o PTLS
+}
+
+
+@dataclass
+class SimResult:
+    rounds: int
+    cum_time_s: np.ndarray           # (R,)
+    accuracy: np.ndarray             # (R,) mean cohort val accuracy
+    loss: np.ndarray                 # (R,)
+    rates: np.ndarray                # (R,) mean dropout rate used
+    active_fraction: np.ndarray      # (R,) measured E[L~]/L
+    traffic_mb: np.ndarray           # (R,) cohort total
+    energy_j: np.ndarray             # (R,) cohort total
+    memory_gb: np.ndarray            # (R,) max per-device footprint
+    final_accuracy: float = 0.0
+
+    def time_to_accuracy(self, target: float) -> Optional[float]:
+        hit = np.where(self.accuracy >= target)[0]
+        return float(self.cum_time_s[hit[0]]) if len(hit) else None
+
+
+class FederatedSimulator:
+    def __init__(
+        self,
+        cfg,
+        peft_cfg,
+        stld_cfg,
+        fed_cfg,
+        train_cfg,
+        *,
+        strategy: Strategy | str = "droppeft",
+        task=None,
+        cost_cfg=None,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.peft_cfg = peft_cfg
+        self.stld_cfg = stld_cfg
+        self.fed_cfg = fed_cfg
+        self.train_cfg = train_cfg
+        self.strategy = METHODS[strategy] if isinstance(strategy, str) else strategy
+        self.rng = np.random.default_rng(seed)
+        self.key = jax.random.PRNGKey(seed)
+
+        self.task = task or make_task(vocab_size=cfg.vocab_size, seed=seed)
+        parts = dirichlet_partition(
+            self.task.labels, fed_cfg.num_devices, fed_cfg.dirichlet_alpha, seed=seed
+        )
+        self.devices = [
+            DeviceDataset(self.task, idx, seed=seed + i) for i, idx in enumerate(parts)
+        ]
+        self.device_profile = [sample_device(self.rng) for _ in range(fed_cfg.num_devices)]
+
+        self.key, k1, k2 = jax.random.split(self.key, 3)
+        self.base_params = init_params(k1, cfg)
+        self.global_peft = peft_lib.init_peft(k2, cfg, peft_cfg)
+        self.device_peft: Dict[int, list] = {}
+        stack_mode = default_stack_mode(cfg)
+        self.local_round, self.evaluate = make_client_fns(
+            cfg, peft_cfg, stld_cfg, train_cfg, stack_mode=stack_mode
+        )
+        self.system = SystemModel(cost_cfg or cfg, peft_cfg)
+        self.configurator = (
+            OnlineConfigurator(
+                rate_grid=fed_cfg.rate_grid,
+                num_candidates=fed_cfg.num_candidates,
+                explore_rate=fed_cfg.explore_rate,
+                explore_interval=fed_cfg.explore_interval,
+                window_size=fed_cfg.window_size,
+                seed=seed,
+            )
+            if self.strategy.configurator and self.strategy.stld
+            else None
+        )
+        self._prev_acc: Dict[int, float] = {}
+        self._global_step = 0
+        if self.strategy.hetlora:
+            # per-device LoRA rank from device capability tier
+            tiers = {"tx2": 0, "nx": 1, "agx": 2}
+            self.device_rank = [
+                self.strategy.hetlora_ranks[tiers[p]] for p in self.device_profile
+            ]
+            self.max_rank = max(self.strategy.hetlora_ranks)
+            # global tree holds the max rank
+            self.global_peft = peft_lib.init_peft(
+                k2, cfg, peft_cfg.__class__(**{**peft_cfg.__dict__, "lora_rank": self.max_rank})
+            )
+            self._het_fns = {}
+            for r in set(self.device_rank):
+                pc = peft_cfg.__class__(**{**peft_cfg.__dict__, "lora_rank": r})
+                self._het_fns[r] = make_client_fns(
+                    cfg, pc, stld_cfg, train_cfg, stack_mode=stack_mode
+                )
+
+    # ------------------------------------------------------------------ run
+    def run(self, rounds: Optional[int] = None, target_accuracy: Optional[float] = None) -> SimResult:
+        fed = self.fed_cfg
+        rounds = rounds or fed.rounds
+        hist = {k: [] for k in (
+            "time", "acc", "loss", "rate", "active", "traffic", "energy", "memory"
+        )}
+        cum_time = 0.0
+        num_classes = jnp.arange(self.task.num_classes)
+
+        for rnd in range(rounds):
+            cohort = self.rng.choice(
+                fed.num_devices, size=min(fed.devices_per_round, fed.num_devices), replace=False
+            )
+            n = len(cohort)
+            if self.configurator is not None:
+                rates = self.configurator.next_round(n)
+            elif self.strategy.stld:
+                rates = [self.strategy.fixed_rate] * n
+            else:
+                rates = [0.0] * n
+
+            adaopt_depth = self.cfg.num_layers
+            if self.strategy.adaopt:
+                adaopt_depth = min(
+                    self.cfg.num_layers,
+                    2 + (rnd // self.strategy.adaopt_grow_every) * 2,
+                )
+
+            round_accs, round_losses, round_times = [], [], []
+            round_traffic = round_energy = 0.0
+            round_mem = 0.0
+            active_fracs = []
+            client_updates, client_masks, client_ranks = [], [], []
+
+            for i, dev in enumerate(cohort):
+                dev = int(dev)
+                out = self._run_device(
+                    dev, rates[i], num_classes, adaopt_depth
+                )
+                peft_i, metrics, importance, acc = out
+                active_frac = float(metrics["active_layers"]) / self.cfg.num_layers
+                active_fracs.append(active_frac)
+                round_accs.append(acc)
+                round_losses.append(float(metrics["loss"]))
+
+                if self.strategy.ptls:
+                    k = max(1, int(fed.ptls_share_fraction * self.cfg.num_layers))
+                    mask = np.asarray(ptls.shared_layer_mask(importance, k))
+                else:
+                    mask = np.ones((self.cfg.num_layers,), dtype=bool)
+                client_updates.append(peft_i)
+                client_masks.append(mask)
+                if self.strategy.hetlora:
+                    client_ranks.append(self.device_rank[dev])
+
+                share_frac = float(mask.mean())
+                cost = self.system.round_cost(
+                    device=self.device_profile[dev],
+                    bandwidth_mbps=sample_bandwidth(self.rng),
+                    batch=fed.batch_size,
+                    seq=self.task.seq_len,
+                    local_steps=fed.local_steps,
+                    peft=True,
+                    active_fraction=active_frac if self.strategy.stld else 1.0,
+                    share_fraction=share_frac,
+                )
+                round_times.append(cost.total_time_s)
+                round_traffic += cost.traffic_mb
+                round_energy += cost.energy_j
+                round_mem = max(round_mem, cost.memory_gb)
+
+                self.device_peft[dev] = peft_i
+                if not hasattr(self, "_last_mask"):
+                    self._last_mask = {}
+                self._last_mask[dev] = mask
+
+            # ---------------------------------------------------- aggregate
+            if self.strategy.hetlora:
+                self.global_peft = server_lib.hetlora_aggregate(
+                    client_updates, client_ranks, self.max_rank
+                )
+            elif self.strategy.ptls:
+                masks = np.stack(client_masks)
+                self.global_peft = server_lib.ptls_aggregate(
+                    client_updates, masks, self.global_peft
+                )
+            else:
+                self.global_peft = server_lib.fedavg(client_updates)
+
+            # ------------------------------------------------------- report
+            round_wall = max(round_times)  # synchronous round
+            cum_time += round_wall
+            mean_acc = float(np.mean(round_accs))
+            if self.configurator is not None:
+                gains = []
+                for i, dev in enumerate(cohort):
+                    prev = self._prev_acc.get(int(dev), 1.0 / self.task.num_classes)
+                    gains.append(max(round_accs[i] - prev, 0.0))
+                self.configurator.report(rates, gains, round_times)
+            for i, dev in enumerate(cohort):
+                self._prev_acc[int(dev)] = round_accs[i]
+
+            hist["time"].append(cum_time)
+            hist["acc"].append(mean_acc)
+            hist["loss"].append(float(np.mean(round_losses)))
+            hist["rate"].append(float(np.mean(rates)))
+            hist["active"].append(float(np.mean(active_fracs)))
+            hist["traffic"].append(round_traffic)
+            hist["energy"].append(round_energy)
+            hist["memory"].append(round_mem)
+
+            if target_accuracy is not None and mean_acc >= target_accuracy:
+                break
+
+        result = SimResult(
+            rounds=len(hist["time"]),
+            cum_time_s=np.asarray(hist["time"]),
+            accuracy=np.asarray(hist["acc"]),
+            loss=np.asarray(hist["loss"]),
+            rates=np.asarray(hist["rate"]),
+            active_fraction=np.asarray(hist["active"]),
+            traffic_mb=np.asarray(hist["traffic"]),
+            energy_j=np.asarray(hist["energy"]),
+            memory_gb=np.asarray(hist["memory"]),
+        )
+        result.final_accuracy = self.final_accuracy(num_classes)
+        return result
+
+    # ------------------------------------------------------------ internals
+    def _device_start_peft(self, dev: int):
+        """Shared layers from the global model; personalized layers local."""
+        if dev not in self.device_peft or not self.strategy.ptls:
+            if self.strategy.hetlora:
+                return server_lib.truncate_lora_rank(self.global_peft, self.device_rank[dev])
+            return self.global_peft
+        own = self.device_peft[dev]
+        # device keeps its own layers; refresh from global (download)
+        mixed = []
+        for l in range(self.cfg.num_layers):
+            mixed.append(self.global_peft[l] if self._is_shared(dev, l) else own[l])
+        return mixed
+
+    def _is_shared(self, dev: int, l: int) -> bool:
+        mask = getattr(self, "_last_mask", {}).get(dev)
+        return True if mask is None else bool(mask[l])
+
+    def _run_device(self, dev: int, rate: float, num_classes, adaopt_depth: int):
+        ds = self.devices[dev]
+        fed = self.fed_cfg
+        start_peft = self._device_start_peft(dev)
+        if self.strategy.hetlora:
+            rank = self.device_rank[dev]
+            local_round, evaluate = self._het_fns[rank]
+        else:
+            local_round, evaluate = self.local_round, self.evaluate
+
+        batches = list(ds.train_batches(fed.batch_size, fed.local_steps))
+        stacked = {
+            k: jnp.asarray(np.stack([b[k] for b in batches]))
+            for k in ("tokens", "targets", "mask")
+        }
+        self.key, kr = jax.random.split(self.key)
+        opt_state = adamw_init(start_peft)
+        num_active = None
+        if self.stld_cfg.mode == "gather" and self.strategy.stld:
+            from repro.core import stld as stld_lib
+
+            num_active = stld_lib.static_active_count(
+                rate, self.cfg.num_layers, self.stld_cfg.gather_bucket,
+                self.stld_cfg.min_active_layers,
+            )
+        peft_i, _, metrics, importance = local_round(
+            self.base_params,
+            start_peft,
+            opt_state,
+            stacked,
+            jnp.asarray(rate, dtype=jnp.float32),
+            kr,
+            jnp.asarray(self._global_step, dtype=jnp.int32),
+            num_active=num_active,
+        )
+        self._global_step += fed.local_steps
+
+        if self.strategy.adaopt and adaopt_depth < self.cfg.num_layers:
+            # progressive depth: layers beyond the active depth keep their
+            # incoming values (their adapter updates are discarded)
+            peft_i = [
+                peft_i[l] if l < adaopt_depth else start_peft[l]
+                for l in range(self.cfg.num_layers)
+            ]
+
+        val = ds.val_batch()
+        acc = float(
+            evaluate(
+                self.base_params,
+                peft_i,
+                jnp.asarray(val["tokens"]),
+                jnp.asarray(val["labels"]),
+                num_classes,
+            )
+        )
+        return peft_i, metrics, importance, acc
+
+    def final_accuracy(self, num_classes) -> float:
+        """Paper protocol: mean accuracy across ALL devices' local test sets,
+        each device using its personalized model (global for non-participants)."""
+        accs = []
+        for dev in range(self.fed_cfg.num_devices):
+            peft_d = self.device_peft.get(dev, self.global_peft)
+            if self.strategy.hetlora and dev not in self.device_peft:
+                peft_d = server_lib.truncate_lora_rank(self.global_peft, self.device_rank[dev])
+            _, evaluate = (
+                self._het_fns[self.device_rank[dev]]
+                if self.strategy.hetlora
+                else (None, self.evaluate)
+            )
+            val = self.devices[dev].val_batch()
+            accs.append(
+                float(
+                    evaluate(
+                        self.base_params,
+                        peft_d,
+                        jnp.asarray(val["tokens"]),
+                        jnp.asarray(val["labels"]),
+                        num_classes,
+                    )
+                )
+            )
+        return float(np.mean(accs))

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three artifacts:
+  * ``<name>.py`` — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling
+  * ``ops.py``    — jit'd public wrappers with shape plumbing + impl select
+  * ``ref.py``    — pure-jnp oracles used by the allclose test sweeps
+
+On this CPU container kernels run in ``interpret=True`` mode (Pallas does not
+lower to the XLA CPU backend); on TPU the same code JITs natively.
+"""

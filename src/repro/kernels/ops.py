@@ -1,0 +1,77 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``impl='pallas'`` runs the kernels (interpret mode on CPU, native on TPU);
+``impl='xla'`` dispatches to the pure-jnp reference path — the default for
+dry-run lowering since Pallas does not lower to the XLA CPU backend.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lora_matmul import lora_matmul_pallas
+from repro.kernels.mamba_scan import mamba_scan_pallas
+from repro.kernels.rwkv6_scan import wkv6_pallas
+
+
+def _is_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "impl", "block_q", "block_k"))
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window=None,
+    impl: str = "pallas",
+    block_q: int = 128,
+    block_k: int = 128,
+):
+    """q: (B, H, S, D); k, v: (B, KV, S, D) — GQA broadcast handled here."""
+    h, kv = q.shape[1], k.shape[1]
+    if kv != h:
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if impl == "xla":
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k,
+        interpret=_is_cpu(),
+    )
+
+
+@partial(jax.jit, static_argnames=("impl", "chunk"))
+def wkv6(r, k, v, logw, u, *, impl: str = "pallas", chunk: int = 16):
+    if impl == "xla":
+        return ref.wkv6_ref(r, k, v, logw, u)
+    return wkv6_pallas(r, k, v, logw, u, chunk=chunk, interpret=_is_cpu())
+
+
+@partial(jax.jit, static_argnames=("impl", "chunk", "d_block"))
+def mamba_scan(dt, x, bmat, cmat, a, dvec, *, impl: str = "pallas", chunk: int = 64, d_block: int = 256):
+    if impl == "xla":
+        return ref.mamba_scan_ref(dt, x, bmat, cmat, a, dvec)
+    d = x.shape[-1]
+    d_block = min(d_block, d)
+    while d % d_block:
+        d_block //= 2
+    return mamba_scan_pallas(
+        dt, x, bmat, cmat, a, dvec, chunk=chunk, d_block=max(1, d_block), interpret=_is_cpu()
+    )
+
+
+@partial(jax.jit, static_argnames=("alpha", "impl", "block_m", "block_n"))
+def lora_matmul(x, w, a, b, *, alpha: float = 1.0, impl: str = "pallas", block_m: int = 128, block_n: int = 128):
+    if impl == "xla":
+        return ref.lora_matmul_ref(x, w, a, b, alpha=alpha)
+    return lora_matmul_pallas(
+        x, w, a, b, alpha=alpha, block_m=block_m, block_n=block_n, interpret=_is_cpu()
+    )

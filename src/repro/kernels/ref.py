@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """q,k,v: (B, H, S, D) -> (B, H, S, D).  Naive masked softmax attention."""
+    s = q.shape[2]
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * (d**-0.5)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), dtype=bool)
+    if causal:
+        ok = ok & (kpos <= qpos)
+    if window is not None and window > 0:
+        ok = ok & (kpos > qpos - window)
+    scores = jnp.where(ok[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """Sequential WKV6 recurrence.  r,k,v,logw: (B,S,H,K); u: (H,K)."""
+    b, s, h, kd = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, logw))
+    uf = u.astype(jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,K)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,K,V)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, state + uf[None, :, :, None] * kv)
+        state = jnp.exp(w_t)[..., None] * state + kv
+        return state, out
+
+    s0 = jnp.zeros((b, h, kd, kd), dtype=jnp.float32)
+    xs = tuple(t.swapaxes(0, 1) for t in (rf, kf, vf, wf))
+    _, outs = jax.lax.scan(step, s0, xs)
+    return outs.swapaxes(0, 1).astype(r.dtype)  # (B,S,H,V)
+
+
+def mamba_scan_ref(dt, x, bmat, cmat, a, dvec):
+    """Sequential selective scan.  dt,x: (B,S,D); bmat,cmat: (B,S,N);
+    a: (D,N); dvec: (D,)."""
+    dtf, xf = dt.astype(jnp.float32), x.astype(jnp.float32)
+    bf, cf = bmat.astype(jnp.float32), cmat.astype(jnp.float32)
+    af, df = a.astype(jnp.float32), dvec.astype(jnp.float32)
+    b_sz, s, d = x.shape
+    n = bmat.shape[-1]
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp  # (B,D), (B,D), (B,N), (B,N)
+        a_t = jnp.exp(dt_t[..., None] * af[None])          # (B,D,N)
+        h = a_t * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.sum(h * c_t[:, None, :], axis=-1) + df[None] * x_t
+        return h, y
+
+    h0 = jnp.zeros((b_sz, d, n), dtype=jnp.float32)
+    xs = tuple(t.swapaxes(0, 1) for t in (dtf, xf, bf, cf))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)
+
+
+def lora_matmul_ref(x, w, a, b, *, alpha: float = 1.0):
+    xf = x.astype(jnp.float32)
+    return (
+        xf @ w.astype(jnp.float32) + alpha * (xf @ a.astype(jnp.float32)) @ b.astype(jnp.float32)
+    ).astype(x.dtype)

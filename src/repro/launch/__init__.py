@@ -1,0 +1,1 @@
+"""Launchers: production meshes, dry-run, end-to-end train/serve drivers."""

@@ -1,0 +1,277 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and extract the roofline terms.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
+XLA_FLAGS line above executes before any jax import so 512 host platform
+devices exist for ``jax.make_mesh``.
+
+Per cell this:
+  1. builds ShapeDtypeStruct inputs (no allocation, ``input_specs``),
+  2. ``jax.jit(step, in_shardings=...).lower(...).compile()`` on the
+     16x16 (single-pod) and 2x16x16 (multi-pod) meshes,
+  3. records ``memory_analysis()`` (fits-per-device proof),
+     ``cost_analysis()`` (FLOPs / bytes) and the collective bytes parsed
+     from the compiled HLO (all-gather / all-reduce / reduce-scatter /
+     all-to-all / collective-permute operand sizes),
+  4. dumps one JSON per cell under ``results/dryrun/``.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ARCH_IDS,
+    INPUT_SHAPES,
+    PEFTConfig,
+    TrainConfig,
+    get_config,
+    shape_applicable,
+)
+from repro.launch import input_specs as ispec  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step  # noqa: E402
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one 'dtype[1,2,3]' HLO shape string."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt, 4)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the compiled HLO,
+    per collective kind.  (Output shape == bytes moved per participant for
+    AG/AR/A2A; a good first-order collective-traffic proxy.)"""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match '<name> = <shape> <op>(' HLO lines, op like all-reduce(...)
+        m = re.match(r"%?[\w\.\-]+\s*=\s*(\([^)]*\)|[\w\[\],]+)\s+([\w\-]+)", s)
+        if not m:
+            continue
+        shape_str, op = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op.startswith(c):
+                kind = c
+                break
+        if kind is None:
+            continue
+        # tuple shapes: sum every dtype[...] component
+        total = 0
+        if shape_str.startswith("("):
+            for mm in _SHAPE_RE.finditer(shape_str):
+                total += _shape_bytes(mm.group(0))
+        else:
+            total = _shape_bytes(shape_str)
+        out[kind] += total
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, stld_mode: str = "off",
+               stack_mode: str = "unroll", extra_tags: str = "",
+               moe_dispatch: str = "einsum", weights_dtype: str = "float32",
+               fsdp: bool = False, mean_rate: float = 0.5, expert_shard: str = "auto"):
+    """Lower + compile one cell; returns the result record."""
+    cfg = get_config(arch).replace(moe_dispatch=moe_dispatch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    peft_cfg = PEFTConfig(method="lora", lora_rank=8)
+    train_cfg = TrainConfig()
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            regather = None
+            if fsdp:
+                from jax.sharding import NamedSharding, PartitionSpec
+
+                from repro.sharding import specs as sspecs
+
+                sspecs.set_mesh_axis_sizes(mesh)
+                base_shapes = ispec.eval_param_shapes(cfg)
+                tp_specs = sspecs.param_specs(base_shapes, mesh.shape["model"])
+                regather = jax.tree.map(
+                    lambda s: NamedSharding(mesh, s),
+                    tp_specs,
+                    is_leaf=lambda x: isinstance(x, PartitionSpec),
+                )
+            step = make_train_step(
+                cfg, peft_cfg, train_cfg, stld_mode=stld_mode,
+                stack_mode=stack_mode, mean_rate=mean_rate,
+                regather_specs=regather,
+            )
+            args, shardings = ispec.train_inputs(cfg, peft_cfg, shape, mesh, fsdp=fsdp)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, stack_mode=stack_mode)
+            args, shardings = ispec.prefill_inputs(cfg, shape, mesh, weights_dtype=weights_dtype)
+        else:
+            step = make_serve_step(cfg, stack_mode=stack_mode)
+            args, shardings = ispec.serve_inputs(
+                cfg, shape, mesh, weights_dtype=weights_dtype, expert_shard=expert_shard
+            )
+
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            shardings,
+            is_leaf=lambda x: isinstance(x, PartitionSpec),
+        )
+        lowered = jax.jit(step, in_shardings=shardings).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+
+    n_chips = 1
+    for v in dict(mesh.shape).values():
+        n_chips *= v
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "stld_mode": stld_mode,
+        "stack_mode": stack_mode,
+        "tags": extra_tags,
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+    }
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="input shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true", help="2x16x16 mesh (else 16x16)")
+    ap.add_argument("--stld", default="off", choices=["off", "cond", "gather"])
+    ap.add_argument(
+        "--stack-mode",
+        default="unroll",
+        choices=["unroll", "scan", "group", "auto"],
+        help="'auto' = group for hybrid archs, scan otherwise (fast compiles; "
+        "used for the multi-pod pass where only lowering success matters)",
+    )
+    ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--moe-dispatch", default="einsum", choices=["einsum", "gather"])
+    ap.add_argument("--weights-dtype", default="float32", choices=["float32", "bfloat16"])
+    ap.add_argument("--fsdp", action="store_true", help="ZeRO-3-shard base params over data axes")
+    ap.add_argument("--mean-rate", type=float, default=0.5, help="STLD mean dropout rate")
+    ap.add_argument("--expert-shard", default="auto", choices=["auto", "ff"],
+                    help="shard stacked expert weights on E (auto) or within-expert ff")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for arch in archs:
+        for shape_name in shapes:
+            mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+            name = f"{arch}__{shape_name}__{mesh_tag}"
+            if args.stld != "off":
+                name += f"__stld-{args.stld}"
+            if args.tag:
+                name += f"__{args.tag}"
+            out_path = os.path.join(args.out_dir, name + ".json")
+            if not shape_applicable(arch, shape_name):
+                rec = {
+                    "arch": arch,
+                    "shape": shape_name,
+                    "mesh": mesh_tag,
+                    "ok": False,
+                    "skipped": True,
+                    "reason": "long-context decode inapplicable (DESIGN.md skip matrix)",
+                }
+                with open(out_path, "w") as f:
+                    json.dump(rec, f, indent=2)
+                print(f"SKIP {name}")
+                continue
+            stack_mode = args.stack_mode
+            if stack_mode == "auto":
+                stack_mode = "group" if get_config(arch).family == "hybrid" else "scan"
+            try:
+                rec = lower_cell(
+                    arch,
+                    shape_name,
+                    multi_pod=args.multi_pod,
+                    stld_mode=args.stld,
+                    stack_mode=stack_mode,
+                    extra_tags=args.tag,
+                    moe_dispatch=args.moe_dispatch,
+                    weights_dtype=args.weights_dtype,
+                    fsdp=args.fsdp,
+                    mean_rate=args.mean_rate,
+                    expert_shard=args.expert_shard,
+                )
+                print(
+                    f"OK   {name}: flops={rec['flops']:.3e} "
+                    f"bytes={rec['bytes_accessed']:.3e} "
+                    f"coll={rec['collectives']['total']:.3e} "
+                    f"peak/dev={rec['memory']['peak_bytes']/2**30:.2f}GiB "
+                    f"compile={rec['compile_s']:.0f}s"
+                )
+            except Exception as e:  # noqa: BLE001 - record the failure
+                rec = {
+                    "arch": arch,
+                    "shape": shape_name,
+                    "mesh": mesh_tag,
+                    "ok": False,
+                    "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:],
+                }
+                print(f"FAIL {name}: {type(e).__name__}: {e}")
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

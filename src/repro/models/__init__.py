@@ -1,0 +1,4 @@
+"""Architecture assembly: layer blocks, decoder stacks, registry."""
+from repro.models.registry import build_model, init_params, model_apply
+
+__all__ = ["build_model", "init_params", "model_apply"]

@@ -1,0 +1,217 @@
+"""Per-layer residual blocks with a uniform (h, cache) -> (h, aux, cache)
+interface, so the STLD gate (repro.core.stld) can wrap any layer kind.
+
+Layer kinds (``layer_kind(cfg, l)``):
+  * ``attn``   — pre-norm GQA attention + (MoE | MLP)
+  * ``mamba``  — pre-norm Mamba block + (MoE | MLP)        (hybrid archs)
+  * ``rwkv``   — RWKV6 time-mix + channel-mix              (ssm archs)
+  * ``encdec`` — self-attn + cross-attn + MLP              (whisper decoder)
+  * ``enc``    — bidirectional attn + MLP                  (whisper encoder)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import (
+    attention_apply,
+    cross_attention_apply,
+    init_attention,
+    init_cross_attention,
+)
+from repro.nn.mamba import init_mamba, init_mamba_state, mamba_apply
+from repro.nn.mlp import adapter_apply, init_mlp, mlp_apply
+from repro.nn.moe import init_moe, moe_apply
+from repro.nn.norms import (
+    apply_layernorm,
+    apply_rmsnorm,
+    init_layernorm,
+    init_rmsnorm,
+)
+from repro.nn.rwkv import (
+    channel_mix_apply,
+    init_rwkv_channel_mix,
+    init_rwkv_state,
+    init_rwkv_time_mix,
+    time_mix_apply,
+)
+
+
+def layer_kind(cfg, l: int) -> str:
+    if cfg.family == "ssm":
+        return "rwkv"
+    if cfg.family == "audio":
+        return "encdec"
+    if cfg.family == "hybrid" and not cfg.is_attention_layer(l):
+        return "mamba"
+    return "attn"
+
+
+def _norm_pair(cfg, dim):
+    if cfg.activation == "gelu":  # whisper-style layernorm
+        return init_layernorm(dim)
+    return init_rmsnorm(dim)
+
+
+def _apply_norm(cfg, p, x):
+    if "bias" in p:
+        return apply_layernorm(p, x, cfg.norm_eps)
+    return apply_rmsnorm(p, x, cfg.norm_eps)
+
+
+def init_layer(key, cfg, l: int, force_kind: Optional[str] = None):
+    """Parameters for layer ``l`` of the decoder stack.
+
+    ``force_kind='attn'`` is used by the whisper *encoder* (plain
+    bidirectional attention layers inside an ``audio`` config)."""
+    kind = force_kind or layer_kind(cfg, l)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"norm1": _norm_pair(cfg, cfg.d_model), "norm2": _norm_pair(cfg, cfg.d_model)}
+    if kind == "rwkv":
+        p["time_mix"] = init_rwkv_time_mix(k1, cfg)
+        p["channel_mix"] = init_rwkv_channel_mix(k2, cfg)
+        return p
+    if kind == "mamba":
+        p["mamba"] = init_mamba(k1, cfg)
+    else:
+        p["attn"] = init_attention(k1, cfg)
+    if kind == "encdec":
+        p["cross"] = init_cross_attention(k3, cfg)
+        p["norm_cross"] = _norm_pair(cfg, cfg.d_model)
+    if cfg.is_moe_layer(l):
+        p["moe"] = init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k2, cfg)
+    return p
+
+
+def init_layer_cache(cfg, l: int, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Decode-time cache/state for layer ``l``."""
+    kind = layer_kind(cfg, l)
+    if kind == "rwkv":
+        return init_rwkv_state(cfg, batch)
+    if kind == "mamba":
+        return init_mamba_state(cfg, batch)
+    hd = cfg.resolved_head_dim
+    cache_len = max_len
+    if cfg.sliding_window is not None:
+        cache_len = min(max_len, cfg.sliding_window)
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.num_kv_heads, hd), dtype=dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.num_kv_heads, hd), dtype=dtype),
+        "pos": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def params_kind(params) -> str:
+    """Infer the layer kind from its parameter structure (scan-safe: no
+    layer index needed)."""
+    if "time_mix" in params:
+        return "rwkv"
+    if "mamba" in params:
+        return "mamba"
+    if "cross" in params:
+        return "encdec"
+    return "attn"
+
+
+def layer_apply(
+    params,
+    cfg,
+    h,
+    *,
+    positions,
+    causal: bool = True,
+    cache: Optional[dict] = None,
+    enc_kv: Optional[dict] = None,
+    peft: Optional[dict] = None,
+    lora_scale: float = 1.0,
+):
+    """One residual block.  Returns (h, moe_aux, new_cache)."""
+    kind = params_kind(params)
+    peft = peft or {}
+    aux = jnp.zeros((), dtype=jnp.float32)
+    new_cache = cache
+
+    if kind == "rwkv":
+        tm_out, tm_state = time_mix_apply(
+            params["time_mix"], cfg, _apply_norm(cfg, params["norm1"], h), state=cache
+        )
+        if "bias_attn" in peft:
+            tm_out = tm_out + peft["bias_attn"].astype(tm_out.dtype)
+        h = h + tm_out
+        cm_out, cm_state = channel_mix_apply(
+            params["channel_mix"],
+            cfg,
+            _apply_norm(cfg, params["norm2"], h),
+            state=cache,
+            peft=peft.get("cm"),
+            lora_scale=lora_scale,
+        )
+        if "adapter_mlp" in peft:
+            cm_out = adapter_apply(peft["adapter_mlp"], cm_out)
+        if "bias_mlp" in peft:
+            cm_out = cm_out + peft["bias_mlp"].astype(cm_out.dtype)
+        h = h + cm_out
+        if cache is not None:
+            new_cache = {**tm_state, **cm_state}
+        return h, aux, new_cache
+
+    if kind == "mamba":
+        out, state = mamba_apply(
+            params["mamba"],
+            cfg,
+            _apply_norm(cfg, params["norm1"], h),
+            state=cache,
+            peft=peft.get("mamba"),
+            lora_scale=lora_scale,
+        )
+        if "bias_attn" in peft:
+            out = out + peft["bias_attn"].astype(out.dtype)
+        h = h + out
+    else:
+        out, attn_cache = attention_apply(
+            params["attn"],
+            cfg,
+            _apply_norm(cfg, params["norm1"], h),
+            positions,
+            causal=causal,
+            cache=cache,
+            peft=peft.get("attn"),
+            lora_scale=lora_scale,
+        )
+        if "adapter_attn" in peft:
+            out = adapter_apply(peft["adapter_attn"], out)
+        if "bias_attn" in peft:
+            out = out + peft["bias_attn"].astype(out.dtype)
+        h = h + out
+
+    if kind == "encdec" and enc_kv is not None:
+        out = cross_attention_apply(
+            params["cross"],
+            cfg,
+            _apply_norm(cfg, params["norm_cross"], h),
+            enc_kv,
+            peft=peft.get("cross"),
+            lora_scale=lora_scale,
+        )
+        h = h + out
+
+    x = _apply_norm(cfg, params["norm2"], h)
+    if "moe" in params:
+        out, aux = moe_apply(params["moe"], cfg, x)
+    else:
+        out = mlp_apply(params["mlp"], cfg, x, peft.get("mlp"), lora_scale)
+    if "adapter_mlp" in peft:
+        out = adapter_apply(peft["adapter_mlp"], out)
+    if "bias_mlp" in peft:
+        out = out + peft["bias_mlp"].astype(out.dtype)
+    h = h + out
+
+    if kind == "mamba":
+        new_cache = state if cache is not None else None
+    elif kind in ("attn", "encdec"):
+        new_cache = attn_cache
+    return h, aux.astype(jnp.float32), new_cache

@@ -1,0 +1,31 @@
+"""Losses and metrics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, labels, mask=None, z_loss_coef: float = 0.0):
+    """Token-level cross entropy in fp32.
+
+    logits: (..., V); labels: (...) int32; mask: (...) {0,1}.
+    Returns (mean_loss, metrics dict).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - label_logit
+    if z_loss_coef > 0.0:
+        nll = nll + z_loss_coef * jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    acc = jnp.sum((jnp.argmax(logits, axis=-1) == labels) * mask) / denom
+    return loss, {"loss": loss, "accuracy": acc, "tokens": denom}
+
+
+def lm_shift_labels(tokens):
+    """Next-token prediction: inputs tokens[:, :-1], labels tokens[:, 1:]."""
+    return tokens[:, :-1], tokens[:, 1:]

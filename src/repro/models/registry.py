@@ -1,0 +1,87 @@
+"""Model registry: uniform init/apply across all 10 assigned architectures.
+
+``init_params(key, cfg)``     -> param pytree
+``model_apply(params, cfg, batch, **kw)`` -> (logits, aux, caches)
+
+``batch`` keys by modality:
+  text   : {"tokens": (B, S)}
+  vision : {"tokens": (B, S), "patches": (B, P, d)}   (stub frontend)
+  audio  : {"tokens": (B, S_dec), "frames": (B, S_enc, d)}  (stub frontend)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.models import encdec, transformer
+
+
+def build_model(cfg):
+    """Return (init_fn, apply_fn) for the architecture family."""
+    return init_params, model_apply
+
+
+def init_params(key, cfg):
+    if cfg.is_encoder_decoder:
+        return encdec.init_encdec(key, cfg)
+    return transformer.init_lm(key, cfg)
+
+
+def model_apply(
+    params,
+    cfg,
+    batch,
+    *,
+    drops=None,
+    caches=None,
+    enc_kvs=None,
+    positions=None,
+    peft=None,
+    lora_scale: float = 1.0,
+    stack_mode: str = "unroll",
+    active_idx=None,
+    remat: bool = False,
+):
+    if cfg.is_encoder_decoder:
+        if enc_kvs is None:
+            enc_out = encdec.encode(
+                params,
+                cfg,
+                batch["frames"],
+                peft=None,
+                stack_mode=stack_mode if stack_mode in ("unroll", "scan") else "unroll",
+            )
+            enc_kvs = encdec.encoder_cross_kvs(params, cfg, enc_out)
+        return encdec.decode(
+            params,
+            cfg,
+            batch["tokens"],
+            enc_kvs,
+            positions=positions,
+            drops=drops,
+            caches=caches,
+            peft=peft,
+            lora_scale=lora_scale,
+            stack_mode=stack_mode if stack_mode in ("unroll", "scan") else "unroll",
+        )
+    prefix = batch.get("patches") if cfg.modality == "vision" else None
+    return transformer.lm_apply(
+        params,
+        cfg,
+        batch["tokens"],
+        positions=positions,
+        prefix_embeds=prefix,
+        drops=drops,
+        caches=caches,
+        peft=peft,
+        lora_scale=lora_scale,
+        stack_mode=stack_mode,
+        active_idx=active_idx,
+        remat=remat,
+    )
+
+
+def default_stack_mode(cfg) -> str:
+    """Preferred training stack mode per family (dry-run overrides to unroll)."""
+    if cfg.family == "hybrid":
+        return "group"
+    return "scan"

@@ -1,0 +1,286 @@
+"""Decoder-stack assembly with STLD-gated layers.
+
+Stack execution modes (``stack_mode``):
+
+* ``unroll`` — python loop over layers.  Used by the dry-run so
+  ``cost_analysis`` counts every layer (a ``lax.scan`` body is costed once —
+  measured 10x undercount, see DESIGN.md §8) and by heterogeneous stacks.
+* ``scan``   — ``lax.scan`` over stacked layer params (homogeneous stacks):
+  fast compiles for deep models; the training default.
+* ``group``  — ``lax.scan`` over groups of ``cfg.layer_period`` layers
+  (Jamba's mamba/attn/MoE interleave repeats with period 8).
+* ``gather`` — gather-STLD (core.stld): static active count, traced indices,
+  scan over the gathered sub-stack.
+
+STLD gating (``drops``) composes with ``unroll``/``scan``/``group``;
+``gather`` replaces it with index sampling.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stld
+from repro.models.layers import init_layer, init_layer_cache, layer_apply
+from repro.nn.initializers import normal_init
+from repro.nn.norms import apply_layernorm, apply_rmsnorm, init_layernorm, init_rmsnorm
+
+_EMPTY = object()  # sentinel for absent scan inputs
+
+
+def _stack(trees: Sequence):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _homogeneous(trees: Sequence) -> bool:
+    if not trees:
+        return True
+    ref = jax.tree.structure(trees[0])
+    shapes = jax.tree.map(jnp.shape, trees[0])
+    for t in trees[1:]:
+        if jax.tree.structure(t) != ref or jax.tree.map(jnp.shape, t) != shapes:
+            return False
+    return True
+
+
+def _norm_init(cfg, dim):
+    return init_layernorm(dim) if cfg.activation == "gelu" else init_rmsnorm(dim)
+
+
+def _norm_apply(cfg, p, x):
+    return apply_layernorm(p, x, cfg.norm_eps) if "bias" in p else apply_rmsnorm(p, x, cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init_lm(key, cfg):
+    """Decoder-only LM (also the VLM/MoE/hybrid/ssm backbone)."""
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    params = {
+        "embed": normal_init(k_emb, (cfg.vocab_size, cfg.d_model)),
+        "layers": [init_layer(layer_keys[l], cfg, l) for l in range(cfg.num_layers)],
+        "final_norm": _norm_init(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(k_head, (cfg.d_model, cfg.vocab_size))
+    return params
+
+
+def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return [init_layer_cache(cfg, l, batch, max_len, dtype) for l in range(cfg.num_layers)]
+
+
+# --------------------------------------------------------------------------
+# stack execution
+# --------------------------------------------------------------------------
+def stack_apply(
+    layers: Sequence,
+    cfg,
+    h,
+    *,
+    positions,
+    causal: bool = True,
+    drops=None,
+    caches: Optional[Sequence] = None,
+    enc_kvs: Optional[Sequence] = None,
+    peft: Optional[Sequence] = None,
+    lora_scale: float = 1.0,
+    stack_mode: str = "unroll",
+    active_idx=None,
+    remat: bool = False,
+):
+    """Run the layer stack.  Returns (h, aux_sum, new_caches)."""
+    num_layers = len(layers)
+
+    def block(p_l, peft_l, enc_kv_l, h, cache_l):
+        fn = lambda hh, cc: layer_apply(
+            p_l,
+            cfg,
+            hh,
+            positions=positions,
+            causal=causal,
+            cache=cc,
+            enc_kv=enc_kv_l,
+            peft=peft_l,
+            lora_scale=lora_scale,
+        )
+        if remat:
+            fn = jax.checkpoint(fn)
+        return fn(h, cache_l)
+
+    # ---------------------------------------------------------- unroll
+    if stack_mode == "unroll":
+        aux_sum = jnp.zeros((), dtype=jnp.float32)
+        new_caches = [] if caches is not None else None
+        for l in range(num_layers):
+            cache_l = caches[l] if caches is not None else None
+            peft_l = peft[l] if peft is not None else None
+            enc_kv_l = enc_kvs[l] if enc_kvs is not None else None
+            fn = lambda hh, cc, p=layers[l], pf=peft_l, ek=enc_kv_l: block(p, pf, ek, hh, cc)
+            if drops is not None:
+                h, aux, cache_l = stld.gate(fn, drops[l], h, cache_l)
+            else:
+                h, aux, cache_l = fn(h, cache_l)
+            aux_sum = aux_sum + aux
+            if new_caches is not None:
+                new_caches.append(cache_l)
+        return h, aux_sum, new_caches
+
+    # -------------------------------------------------- gather_unroll
+    # gather-STLD with a python loop over the k gathered layers: same
+    # compiled semantics as "gather", but every block appears in the HLO so
+    # cost_analysis is exact (a lax.scan body is costed once — DESIGN.md §8).
+    if stack_mode == "gather_unroll":
+        if not _homogeneous(list(layers)):
+            raise ValueError("gather_unroll requires a homogeneous stack")
+        assert active_idx is not None, "gather_unroll needs active_idx"
+        stacked = _stack(list(layers))
+        peft_s = _stack(list(peft)) if peft is not None else None
+        take = lambda tree, i: jax.tree.map(lambda x: x[i], tree)
+        aux_sum = jnp.zeros((), dtype=jnp.float32)
+        for j in range(active_idx.shape[0]):
+            idx = active_idx[j]
+            p_l = take(stacked, idx)
+            peft_l = take(peft_s, idx) if peft_s is not None else None
+            h, aux, _ = block(p_l, peft_l, None, h, None)
+            aux_sum = aux_sum + aux
+        return h, aux_sum, None
+
+    # ------------------------------------------------------ scan / gather
+    if stack_mode in ("scan", "gather"):
+        if not _homogeneous(list(layers)):
+            raise ValueError(f"stack_mode={stack_mode!r} requires a homogeneous stack")
+        cols = {
+            "params": _stack(list(layers)),
+            "peft": _stack(list(peft)) if peft is not None else _EMPTY,
+            "caches": _stack(list(caches)) if caches is not None else _EMPTY,
+            "enc": _stack(list(enc_kvs)) if enc_kvs is not None else _EMPTY,
+            "drops": drops if drops is not None else _EMPTY,
+        }
+        if stack_mode == "gather":
+            assert active_idx is not None, "gather mode needs active_idx"
+            cols["drops"] = _EMPTY  # gathering *is* the dropout
+            for name in ("params", "peft", "caches", "enc"):
+                if cols[name] is not _EMPTY:
+                    cols[name] = jax.tree.map(
+                        lambda x: jnp.take(x, active_idx, axis=0), cols[name]
+                    )
+        order = [k for k, v in cols.items() if v is not _EMPTY]
+        xs = tuple(cols[k] for k in order)
+
+        def body(h, xs_vals):
+            v = dict(zip(order, xs_vals))
+            fn = lambda hh, cc: block(v["params"], v.get("peft"), v.get("enc"), hh, cc)
+            cache_l = v.get("caches")
+            if "drops" in v:
+                h, aux, new_cache = stld.gate(fn, v["drops"], h, cache_l)
+            else:
+                h, aux, new_cache = fn(h, cache_l)
+            return h, (aux, new_cache if caches is not None else jnp.zeros((0,)))
+
+        h, (auxs, new_caches_s) = jax.lax.scan(body, h, xs)
+        aux_sum = jnp.sum(auxs)
+        if caches is None:
+            return h, aux_sum, None
+        new_caches = [jax.tree.map(lambda x: x[i], new_caches_s) for i in range(num_layers)]
+        return h, aux_sum, new_caches
+
+    # ------------------------------------------------------------- group
+    if stack_mode == "group":
+        period = cfg.layer_period
+        if num_layers % period:
+            raise ValueError("group mode requires num_layers % layer_period == 0")
+        n_groups = num_layers // period
+        by_slot = lambda seq: tuple(
+            _stack([seq[g * period + s] for g in range(n_groups)]) for s in range(period)
+        )
+        cols = {
+            "params": by_slot(list(layers)),
+            "peft": by_slot(list(peft)) if peft is not None else _EMPTY,
+            "caches": by_slot(list(caches)) if caches is not None else _EMPTY,
+            "drops": drops.reshape(n_groups, period) if drops is not None else _EMPTY,
+        }
+        order = [k for k, v in cols.items() if v is not _EMPTY]
+        xs = tuple(cols[k] for k in order)
+
+        def gbody(h, xs_vals):
+            v = dict(zip(order, xs_vals))
+            aux_sum = jnp.zeros((), dtype=jnp.float32)
+            out_caches = []
+            for s in range(period):
+                cache_l = v["caches"][s] if "caches" in v else None
+                peft_l = v["peft"][s] if "peft" in v else None
+                fn = lambda hh, cc, p=v["params"][s], pf=peft_l: block(p, pf, None, hh, cc)
+                if "drops" in v:
+                    h, aux, cache_l = stld.gate(fn, v["drops"][s], h, cache_l)
+                else:
+                    h, aux, cache_l = fn(h, cache_l)
+                aux_sum = aux_sum + aux
+                out_caches.append(cache_l if cache_l is not None else jnp.zeros((0,)))
+            return h, (aux_sum, tuple(out_caches))
+
+        h, (auxs, new_slot_caches) = jax.lax.scan(gbody, h, xs)
+        aux_sum = jnp.sum(auxs)
+        if caches is None:
+            return h, aux_sum, None
+        new_caches = []
+        for g in range(n_groups):
+            for s in range(period):
+                new_caches.append(jax.tree.map(lambda x: x[g], new_slot_caches[s]))
+        return h, aux_sum, new_caches
+
+    raise ValueError(f"unknown stack_mode {stack_mode!r}")
+
+
+# --------------------------------------------------------------------------
+# LM forward
+# --------------------------------------------------------------------------
+def lm_apply(
+    params,
+    cfg,
+    tokens,
+    *,
+    positions=None,
+    prefix_embeds=None,
+    drops=None,
+    caches=None,
+    peft=None,
+    lora_scale: float = 1.0,
+    stack_mode: str = "unroll",
+    active_idx=None,
+    remat: bool = False,
+):
+    """Decoder-only LM forward.
+
+    tokens: (B, S) int32.  ``prefix_embeds`` (B, P, d) is prepended (VLM stub
+    frontend).  Returns (logits, aux, new_caches).
+    """
+    compute_dtype = jnp.dtype(cfg.dtype)
+    h = params["embed"][tokens].astype(compute_dtype)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(compute_dtype), h], axis=1)
+    if positions is None:
+        positions = jnp.arange(h.shape[1])
+
+    h, aux, new_caches = stack_apply(
+        params["layers"],
+        cfg,
+        h,
+        positions=positions,
+        causal=True,
+        drops=drops,
+        caches=caches,
+        peft=peft,
+        lora_scale=lora_scale,
+        stack_mode=stack_mode,
+        active_idx=active_idx,
+        remat=remat,
+    )
+    h = _norm_apply(cfg, params["final_norm"], h)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head.astype(compute_dtype)
+    return logits, aux, new_caches

@@ -1,0 +1,25 @@
+"""Functional neural-network substrate (framework-internal; no flax).
+
+Convention: every module is an ``init_*(key, ...) -> params`` /
+``*_apply(params, ...) -> out`` pair over plain pytrees of jnp arrays.
+Parameters are stored in ``param_dtype`` (fp32); activations are computed in
+``dtype`` (bf16 by default).
+"""
+from repro.nn.initializers import normal_init, truncated_lecun, zeros_init
+from repro.nn.linear import apply_linear, init_linear, lora_delta
+from repro.nn.norms import apply_layernorm, apply_rmsnorm, init_layernorm, init_rmsnorm
+from repro.nn.rotary import apply_rotary
+
+__all__ = [
+    "normal_init",
+    "truncated_lecun",
+    "zeros_init",
+    "apply_linear",
+    "init_linear",
+    "lora_delta",
+    "apply_layernorm",
+    "apply_rmsnorm",
+    "init_layernorm",
+    "init_rmsnorm",
+    "apply_rotary",
+]

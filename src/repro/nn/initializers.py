@@ -1,0 +1,20 @@
+"""Parameter initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, stddev: float = 0.02, dtype=jnp.float32):
+    return stddev * jax.random.normal(key, shape, dtype=dtype)
+
+
+def truncated_lecun(key, shape, dtype=jnp.float32):
+    """LeCun-normal (fan-in) truncated init, the default for projections."""
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    stddev = (1.0 / max(1, fan_in)) ** 0.5
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype=dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype=dtype)

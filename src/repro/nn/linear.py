@@ -1,0 +1,45 @@
+"""Linear projection with optional bias and LoRA side-branch.
+
+LoRA params for a projection are ``{"a": (in, r), "b": (r, out)}``; the
+scaling alpha/r is folded into ``b`` at init-time scale 0 (b starts at zero),
+with the runtime ``scale`` passed explicitly so merged/unmerged paths agree.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.nn.initializers import truncated_lecun, zeros_init
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False, dtype=jnp.float32):
+    p = {"w": truncated_lecun(key, (d_in, d_out), dtype=dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def lora_delta(x, lora, scale: float):
+    """``scale * (x @ a) @ b`` — the LoRA contribution, rank-r bottleneck."""
+    a = lora["a"].astype(x.dtype)
+    b = lora["b"].astype(x.dtype)
+    return (x @ a) @ b * jnp.asarray(scale, dtype=x.dtype)
+
+
+def apply_linear(params, x, lora: Optional[dict] = None, lora_scale: float = 1.0):
+    w = params["w"].astype(x.dtype)
+    y = x @ w
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    if lora is not None:
+        y = y + lora_delta(x, lora, lora_scale)
+    return y
+
+
+def init_lora(key, d_in: int, d_out: int, rank: int, dtype=jnp.float32):
+    """LoRA init per Hu et al.: a ~ normal, b = 0 (delta starts at zero)."""
+    return {
+        "a": truncated_lecun(key, (d_in, rank), dtype=dtype),
+        "b": zeros_init(None, (rank, d_out), dtype=dtype),
+    }

@@ -1,0 +1,137 @@
+"""Mamba (selective SSM) block — Jamba's recurrent layer.
+
+Training/prefill uses the *parallel* form: input-dependent (Delta, B, C) are
+computed with dense matmuls, then the diagonal recurrence
+``h_t = a_t * h_{t-1} + b_t`` runs as a ``jax.lax.associative_scan`` (log-depth,
+unrolled — FLOP-visible to cost_analysis, MXU/VPU friendly on TPU).
+
+Decode uses the O(1) sequential step with a carried ``{"conv", "ssm"}`` state.
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel keeps h in
+shared memory; here the associative scan materialises (B, S, d_in, N)
+transients, which we bound by sharding ``d_in`` over the ``model`` mesh axis
+(the recurrence is elementwise in d_in, so this is communication-free) and by
+rematerialisation in the training step.  The Pallas kernel
+(``repro.kernels.mamba_scan``) is the chunked VMEM-resident production path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.initializers import truncated_lecun
+from repro.nn.linear import apply_linear, init_linear
+
+
+def init_mamba(key, cfg):
+    m = cfg.mamba
+    d = cfg.d_model
+    d_in = m.expand * d
+    dtr = m.resolved_dt_rank(d)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    a = jnp.broadcast_to(jnp.arange(1, m.d_state + 1, dtype=jnp.float32), (d_in, m.d_state))
+    return {
+        "in_proj": init_linear(k1, d, 2 * d_in),
+        "conv_w": truncated_lecun(k2, (m.d_conv, d_in)),
+        "conv_b": jnp.zeros((d_in,), dtype=jnp.float32),
+        "x_proj": init_linear(k3, d_in, dtr + 2 * m.d_state),
+        "dt_proj": {
+            "w": truncated_lecun(k4, (dtr, d_in)),
+            "b": jnp.log(jnp.expm1(jnp.full((d_in,), 0.01, dtype=jnp.float32))),
+        },
+        "A_log": jnp.log(a),
+        "D": jnp.ones((d_in,), dtype=jnp.float32),
+        "out_proj": init_linear(k5, d_in, d),
+    }
+
+
+def _ssm_inputs(params, cfg, x_conv):
+    """Shared Delta/B/C computation. x_conv: (..., d_in) post-conv+silu."""
+    m = cfg.mamba
+    dtr = m.resolved_dt_rank(cfg.d_model)
+    dbc = apply_linear(params["x_proj"], x_conv)
+    dt, b, c = jnp.split(dbc, [dtr, dtr + m.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        dt @ params["dt_proj"]["w"].astype(dt.dtype) + params["dt_proj"]["b"].astype(dt.dtype)
+    )  # (..., d_in)
+    return dt, b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def _causal_conv(params, cfg, x, conv_state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over time. x: (B, S, d_in)."""
+    m = cfg.mamba
+    w = params["conv_w"].astype(x.dtype)  # (d_conv, d_in)
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], m.d_conv - 1, x.shape[-1]), dtype=x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S + d_conv - 1, d_in)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(m.d_conv))
+    out = out + params["conv_b"].astype(x.dtype)
+    new_state = xp[:, -(m.d_conv - 1) :] if m.d_conv > 1 else pad
+    return out, new_state
+
+
+def mamba_apply(params, cfg, x, state: Optional[dict] = None, peft: Optional[dict] = None, lora_scale: float = 1.0):
+    """x: (B, S, d).  Returns (out, new_state); state used only for decode."""
+    m = cfg.mamba
+    b_sz, s, _ = x.shape
+    d_in = m.expand * cfg.d_model
+    peft = peft or {}
+
+    xz = apply_linear(params["in_proj"], x, peft.get("in"), lora_scale)
+    xr, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = state["conv"] if state is not None else None
+    x_conv, new_conv = _causal_conv(params, cfg, xr, conv_state)
+    x_conv = jax.nn.silu(x_conv)
+
+    dt, bmat, cmat = _ssm_inputs(params, cfg, x_conv)
+    a = -jnp.exp(params["A_log"])  # (d_in, N) fp32
+    xf = x_conv.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    # discretise: a_bar = exp(dt * A); b_bar*x = dt * B_t * x_t
+    a_bar = jnp.exp(dtf[..., None] * a)                       # (B,S,d_in,N)
+    bx = (dtf * xf)[..., None] * bmat[..., None, :]           # (B,S,d_in,N)
+
+    if state is None:
+        # parallel associative scan over time: h_t = a_t h_{t-1} + b_t
+        def combine(lhs, rhs):
+            a_l, b_l = lhs
+            a_r, b_r = rhs
+            return a_l * a_r, a_r * b_l + b_r
+
+        _, h = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+        new_ssm = h[:, -1]
+    else:
+        h0 = state["ssm"].astype(jnp.float32)
+        if s == 1:
+            h = (a_bar[:, 0] * h0 + bx[:, 0])[:, None]
+        else:  # short multi-token chunk with an incoming state
+            def step(carry, inp):
+                a_t, b_t = inp
+                nxt = a_t * carry + b_t
+                return nxt, nxt
+
+            _, h = jax.lax.scan(step, h0, (a_bar.swapaxes(0, 1), bx.swapaxes(0, 1)))
+            h = h.swapaxes(0, 1)
+        new_ssm = h[:, -1]
+
+    y = jnp.einsum("bsdn,bsn->bsd", h, cmat)                   # (B,S,d_in)
+    y = y + params["D"].astype(jnp.float32) * xf
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = apply_linear(params["out_proj"], y, peft.get("out"), lora_scale)
+    new_state = {"conv": new_conv.astype(jnp.float32), "ssm": new_ssm}
+    return out, new_state
+
+
+def init_mamba_state(cfg, batch: int):
+    m = cfg.mamba
+    d_in = m.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, m.d_conv - 1, d_in), dtype=jnp.float32),
+        "ssm": jnp.zeros((batch, d_in, m.d_state), dtype=jnp.float32),
+    }

@@ -1,0 +1,51 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (whisper), plus the
+bottleneck Adapter used by the PEFT 'adapter' method."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import apply_linear, init_linear
+from repro.nn.initializers import truncated_lecun
+
+
+def init_mlp(key, cfg, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.activation == "silu":
+        kg, ku, kd = jax.random.split(key, 3)
+        return {
+            "gate": init_linear(kg, d, ff),
+            "up": init_linear(ku, d, ff),
+            "down": init_linear(kd, ff, d),
+        }
+    ku, kd = jax.random.split(key, 2)
+    return {"up": init_linear(ku, d, ff, bias=True), "down": init_linear(kd, ff, d, bias=True)}
+
+
+def mlp_apply(params, cfg, x, peft: Optional[dict] = None, lora_scale: float = 1.0):
+    peft = peft or {}
+    if "gate" in params:
+        g = apply_linear(params["gate"], x, peft.get("gate"), lora_scale)
+        u = apply_linear(params["up"], x, peft.get("up"), lora_scale)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(apply_linear(params["up"], x, peft.get("up"), lora_scale))
+    return apply_linear(params["down"], h, peft.get("down"), lora_scale)
+
+
+# ----------------------------------------------------------------- adapters
+def init_adapter(key, d_model: int, adapter_dim: int):
+    """Houlsby-style bottleneck adapter; up-proj starts at zero so the
+    adapter is initially an identity residual."""
+    kd, _ = jax.random.split(key)
+    return {
+        "down": {"w": truncated_lecun(kd, (d_model, adapter_dim))},
+        "up": {"w": jnp.zeros((adapter_dim, d_model), dtype=jnp.float32)},
+    }
+
+
+def adapter_apply(params, x):
+    h = jax.nn.gelu(apply_linear(params["down"], x))
+    return x + apply_linear(params["up"], h)

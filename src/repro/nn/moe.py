@@ -1,0 +1,215 @@
+"""Mixture-of-Experts with GShard-style capacity-based dense dispatch.
+
+Token groups keep the dispatch tensors bounded: tokens (B, S, d) are
+reshaped to (G, group, d); per group a top-k router builds dispatch /
+combine tensors (group, E, C).  The einsum formulation is TPU-native: all
+work is MXU matmuls, and with experts sharded over the ``model`` mesh axis
+GSPMD lowers dispatch/combine into all-to-all style collectives.
+
+Aux loss is the standard load-balance loss: ``E * sum_e f_e * p_e``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.initializers import truncated_lecun
+from repro.nn.mlp import init_mlp, mlp_apply
+
+_DEFAULT_GROUP = 4096
+# below this many tokens (single-request decode), dispatch by gathering the
+# routed experts' WEIGHTS instead of routing tokens through all E experts:
+# cuts both the E/topk FLOP waste and — critically for decode, which is
+# weight-read bound — the HBM traffic of cold experts' weights.
+_WEIGHT_GATHER_MAX_TOKENS = 8
+
+
+def init_moe(key, cfg):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    kr, ke, ks = jax.random.split(key, 3)
+    ekeys = jax.random.split(ke, e)
+    experts = [init_mlp(k, cfg) for k in ekeys]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *experts)
+    p = {"router": {"w": truncated_lecun(kr, (d, e))}, "experts": stacked}
+    if cfg.shared_expert:
+        p["shared"] = init_mlp(ks, cfg)
+    return p
+
+
+def _expert_ffn(experts, cfg, x):
+    """x: (E, C, d) -> (E, C, d) with per-expert stacked weights."""
+    if "gate" in experts:
+        g = jnp.einsum("ecd,edf->ecf", x, experts["gate"]["w"].astype(x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", x, experts["up"]["w"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x, experts["up"]["w"].astype(x.dtype)))
+        if "b" in experts["up"]:
+            h = h + experts["up"]["b"].astype(x.dtype)[:, None, :]
+    y = jnp.einsum("ecf,efd->ecd", h, experts["down"]["w"].astype(x.dtype))
+    if "b" in experts["down"]:
+        y = y + experts["down"]["b"].astype(x.dtype)[:, None, :]
+    return y
+
+
+def moe_apply(params, cfg, x, group_size: Optional[int] = None, dispatch_mode: Optional[str] = None):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    ``dispatch_mode``:
+      * ``einsum`` — GShard one-hot matmul dispatch/combine (baseline).
+        Costs ~2*T*E*C*d extra MXU FLOPs (dispatch + combine).
+      * ``gather`` — beyond-paper: build the (E, C) token-index table with
+        argsort/cumsum logic and move tokens with take/segment-scatter;
+        the permutation costs bytes, not FLOPs (EXPERIMENTS.md §Perf).
+    """
+    dispatch_mode = dispatch_mode or cfg.moe_dispatch
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    tokens = x.reshape(-1, d)
+    t = tokens.shape[0]
+    if t <= _WEIGHT_GATHER_MAX_TOKENS and dispatch_mode != "einsum_forced":
+        return _moe_weight_gather(params, cfg, x)
+    g = group_size or min(t, _DEFAULT_GROUP)
+    if t % g:
+        g = t  # fall back to a single group for odd token counts (smoke tests)
+    n_groups = t // g
+    xg = tokens.reshape(n_groups, g, d)
+
+    cap = int(max(k, g / e * cfg.capacity_factor * k))
+    cap = min(cap, g)
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xg, params["router"]["w"].astype(x.dtype)
+    ).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, g, E)
+
+    # top-k routing: iteratively take argmax, mask, renormalise over chosen.
+    gates = []
+    masks = []
+    remaining = probs
+    for _ in range(k):
+        idx = jnp.argmax(remaining, axis=-1)  # (G, g)
+        onehot = jax.nn.one_hot(idx, e, dtype=probs.dtype)
+        gates.append(jnp.sum(probs * onehot, axis=-1))  # (G, g)
+        masks.append(onehot)
+        remaining = remaining * (1.0 - onehot)
+    gate_stack = jnp.stack(gates, axis=-1)  # (G, g, k)
+    denom = jnp.sum(gate_stack, axis=-1, keepdims=True) + 1e-9
+    gate_stack = gate_stack / denom
+
+    # load-balance aux loss over the *first* choice (Switch convention).
+    frac_tokens = jnp.mean(masks[0], axis=1)          # (G, E)
+    mean_probs = jnp.mean(probs, axis=1)              # (G, E)
+    aux = e * jnp.mean(jnp.sum(frac_tokens * mean_probs, axis=-1))
+
+    # capacity assignment: position of each token within its expert queue.
+    used = jnp.zeros((n_groups, e), dtype=jnp.int32)
+    choice_expert, choice_pos, choice_keep = [], [], []
+    onehots = []
+    for i in range(k):
+        mask_i = masks[i]                              # (G, g, E)
+        pos_in_e = jnp.cumsum(mask_i, axis=1) - mask_i + used[:, None, :]
+        keep = (pos_in_e < cap) * mask_i               # drop overflow tokens
+        choice_expert.append(jnp.argmax(mask_i, axis=-1).astype(jnp.int32))     # (G, g)
+        choice_pos.append(jnp.sum(pos_in_e * mask_i, axis=-1).astype(jnp.int32))
+        choice_keep.append(jnp.sum(keep, axis=-1))                              # (G, g)
+        onehots.append((pos_in_e, keep))
+        used = used + jnp.sum(keep, axis=1).astype(jnp.int32)
+
+    if dispatch_mode in ("einsum", "einsum_forced"):
+        dispatch = jnp.zeros((n_groups, g, e, cap), dtype=x.dtype)
+        combine = jnp.zeros((n_groups, g, e, cap), dtype=x.dtype)
+        for i in range(k):
+            pos_in_e, keep = onehots[i]
+            onehot_cap = jax.nn.one_hot(pos_in_e, cap, dtype=x.dtype) * keep.astype(x.dtype)[..., None]
+            dispatch = dispatch + onehot_cap
+            combine = combine + onehot_cap * gate_stack[..., i].astype(x.dtype)[..., None, None]
+        expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg)   # (G, E, C, d)
+        # fold groups into the per-expert token dim so expert FFNs are single
+        # large matmuls: (E, G*C, d)
+        ein = expert_in.transpose(1, 0, 2, 3).reshape(e, n_groups * cap, d)
+        eout = _expert_ffn(params["experts"], cfg, ein)
+        eout = eout.reshape(e, n_groups, cap, d).transpose(1, 0, 2, 3)
+        out = jnp.einsum("gtec,gecd->gtd", combine, eout)         # (G, g, d)
+        out = out.reshape(b, s, d)
+    elif dispatch_mode == "gather":
+        # permutation-based dispatch: bytes instead of one-hot matmul FLOPs
+        n_slots = e * cap
+        xg_pad = jnp.concatenate([xg, jnp.zeros((n_groups, 1, d), xg.dtype)], axis=1)
+        table = jnp.full((n_groups, n_slots), g, dtype=jnp.int32)  # g -> zero row
+        tok_ids = jnp.broadcast_to(jnp.arange(g, dtype=jnp.int32), (n_groups, g))
+        for i in range(k):
+            slot = choice_expert[i] * cap + choice_pos[i]          # (G, g)
+            slot = jnp.where(choice_keep[i] > 0, slot, n_slots)    # park overflow
+            table = jax.vmap(
+                lambda t, s_, ids: t.at[s_].set(ids, mode="drop")
+            )(table, slot, tok_ids)
+        expert_in = jnp.take_along_axis(xg_pad, table[..., None], axis=1)  # (G, E*C, d)
+        ein = expert_in.reshape(n_groups, e, cap, d).transpose(1, 0, 2, 3).reshape(
+            e, n_groups * cap, d
+        )
+        eout = _expert_ffn(params["experts"], cfg, ein)
+        eout = eout.reshape(e, n_groups, cap, d).transpose(1, 0, 2, 3)  # (G,E,C,d)
+        eout_flat = eout.reshape(n_groups, n_slots, d)
+        eout_pad = jnp.concatenate(
+            [eout_flat, jnp.zeros((n_groups, 1, d), eout_flat.dtype)], axis=1
+        )
+        out = jnp.zeros((n_groups, g, d), dtype=x.dtype)
+        for i in range(k):
+            slot = choice_expert[i] * cap + choice_pos[i]
+            slot = jnp.where(choice_keep[i] > 0, slot, n_slots)    # -> zero row
+            picked = jnp.take_along_axis(eout_pad, slot[..., None], axis=1)
+            out = out + gate_stack[..., i].astype(x.dtype)[..., None] * picked
+        out = out.reshape(b, s, d)
+    else:
+        raise ValueError(f"unknown dispatch_mode {dispatch_mode!r}")
+
+    if "shared" in params:
+        out = out + mlp_apply(params["shared"], cfg, x)
+    return out, aux
+
+
+def _moe_weight_gather(params, cfg, x):
+    """Decode-path MoE: per-token top-k expert WEIGHT gather.
+
+    x: (B, S, d) with B*S small.  FLOPs = exactly topk FFNs per token; HBM
+    traffic = only the routed experts' weights (vLLM-style decode MoE).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    xt = x.reshape(-1, d)
+    t = xt.shape[0]
+    logits = (xt @ params["router"]["w"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)          # (t, E)
+    top_p, top_idx = jax.lax.top_k(probs, k)         # (t, k)
+    gates = (top_p / (jnp.sum(top_p, -1, keepdims=True) + 1e-9)).astype(x.dtype)
+
+    ew = params["experts"]
+    out = jnp.zeros_like(xt)
+    for i in range(k):  # k is small (<=8); unrolled gathers stay tiny
+        idx = top_idx[:, i]                          # (t,)
+        if "gate" in ew:
+            gw = jnp.take(ew["gate"]["w"], idx, axis=0).astype(x.dtype)  # (t,d,ff)
+            uw = jnp.take(ew["up"]["w"], idx, axis=0).astype(x.dtype)
+            h = jax.nn.silu(jnp.einsum("td,tdf->tf", xt, gw)) * jnp.einsum(
+                "td,tdf->tf", xt, uw
+            )
+        else:
+            uw = jnp.take(ew["up"]["w"], idx, axis=0).astype(x.dtype)
+            h = jax.nn.gelu(jnp.einsum("td,tdf->tf", xt, uw))
+            if "b" in ew["up"]:
+                h = h + jnp.take(ew["up"]["b"], idx, axis=0).astype(x.dtype)
+        dw = jnp.take(ew["down"]["w"], idx, axis=0).astype(x.dtype)
+        y = jnp.einsum("tf,tfd->td", h, dw)
+        if "b" in ew["down"]:
+            y = y + jnp.take(ew["down"]["b"], idx, axis=0).astype(x.dtype)
+        out = out + gates[:, i][:, None] * y
+
+    # aux loss is a training-time quantity; decode returns 0
+    aux = jnp.zeros((), dtype=jnp.float32)
+    out = out.reshape(b, s, d)
+    if "shared" in params:
+        out = out + mlp_apply(params["shared"], cfg, x)
+    return out, aux

@@ -1,0 +1,235 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent decay + channel-mix.
+
+Training/prefill runs the **chunk-parallel** WKV form (chunk 16):
+within a chunk everything is matmuls using the log-decay division trick
+(numerically safe because the per-step log decay is clamped to
+``[-DECAY_CLAMP, -1e-4]``, so intra-chunk exponents stay within fp32 range);
+across chunks the state recurrence is a ``jax.lax.associative_scan``.
+This mirrors the structure of the Pallas kernel (``repro.kernels.rwkv6_scan``)
+and keeps every FLOP visible to ``cost_analysis``.
+
+Decode runs the O(1) sequential step on a carried state
+``{"wkv": (B,H,K,V), "shift_tm": (B,d), "shift_cm": (B,d)}``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.initializers import normal_init, truncated_lecun
+from repro.nn.linear import apply_linear, init_linear
+
+CHUNK = 16
+DECAY_CLAMP = 4.0  # per-step |log decay| bound -> intra-chunk exp <= e^64
+
+
+def init_rwkv_time_mix(key, cfg):
+    r = cfg.rwkv
+    d = cfg.d_model
+    n_heads = d // r.head_dim
+    keys = jax.random.split(key, 12)
+    ts = r.token_shift_lora_dim
+    p = {
+        "mu_x": normal_init(keys[0], (d,), 0.02),
+        # per-quantity ddlerp mix params + low-rank adjusters (w,k,v,r,g)
+        "mu": normal_init(keys[1], (5, d), 0.02),
+        "ts_lora_a": truncated_lecun(keys[2], (d, 5 * ts)),
+        "ts_lora_b": jnp.zeros((5, ts, d), dtype=jnp.float32),
+        "wr": init_linear(keys[3], d, d),
+        "wk": init_linear(keys[4], d, d),
+        "wv": init_linear(keys[5], d, d),
+        "wg_a": truncated_lecun(keys[6], (d, r.gate_lora_dim)),
+        "wg_b": truncated_lecun(keys[7], (r.gate_lora_dim, d)),
+        "w0": normal_init(keys[8], (d,), 0.02) - 0.6,  # decay bias (pre-clamp)
+        "wd_a": truncated_lecun(keys[9], (d, r.decay_lora_dim)),
+        "wd_b": jnp.zeros((r.decay_lora_dim, d), dtype=jnp.float32),
+        "u": normal_init(keys[10], (n_heads, r.head_dim), 0.02),  # bonus
+        "ln_out_scale": jnp.ones((n_heads, r.head_dim), dtype=jnp.float32),
+        "wo": init_linear(keys[11], d, d),
+    }
+    return p
+
+
+def _token_shift(x, prev):
+    """(B,S,d) shifted right by one; position 0 takes ``prev`` (B,d)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(params, x, xs):
+    """Data-dependent interpolation producing the 5 mixed inputs (w,k,v,r,g)."""
+    base = x + (xs - x) * params["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(base @ params["ts_lora_a"].astype(x.dtype))
+    lora = lora.reshape(*x.shape[:-1], 5, -1)
+    adj = jnp.einsum("...ct,ctd->...cd", lora, params["ts_lora_b"].astype(x.dtype))
+    mu = params["mu"].astype(x.dtype) + adj  # (...,5,d)
+    return x[..., None, :] + (xs - x)[..., None, :] * mu  # (...,5,d)
+
+
+def _wkv_chunked(r, k, v, logw, u, s0=None):
+    """Chunk-parallel WKV.  r,k,v: (B,S,H,K); logw: (B,S,H,K) (<0); u: (H,K);
+    s0: optional initial state (B,H,K,V).
+
+    Returns (out (B,S,H,K_v), final_state (B,H,K,V)).  K == V == head_dim.
+    """
+    b, s, h, kd = r.shape
+    c = CHUNK
+    if s % c:
+        pad = c - s % c
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))  # pad log-decay 0 => w=1
+    n = r.shape[1] // c
+    shp = (b, n, c, h, kd)
+    rc, kc, vc, lw = (t.reshape(shp).astype(jnp.float32) for t in (r, k, v, logw))
+
+    lcum = jnp.cumsum(lw, axis=2)                    # inclusive L_t within chunk
+    lprev = lcum - lw                                # exclusive L_{t-1}
+    ltot = lcum[:, :, -1]                            # (B,N,H,K) chunk total
+
+    q_ = rc * jnp.exp(lprev)                         # bounded <= |r|
+    kappa = kc * jnp.exp(-lcum)                      # <= |k| * e^{c*clamp}
+    kappa_end = kc * jnp.exp(ltot[:, :, None] - lcum)  # bounded <= |k|
+
+    # intra-chunk attention-like matrix (strictly lower) + bonus diagonal
+    amat = jnp.einsum("bnthk,bnjhk->bnhtj", q_, kappa)
+    mask = jnp.tril(jnp.ones((c, c), dtype=bool), k=-1)
+    amat = jnp.where(mask[None, None, None], amat, 0.0)
+    diag = jnp.einsum("bnthk,hk,bnthk->bnth", rc, u.astype(jnp.float32), kc)
+    intra = jnp.einsum("bnhtj,bnjhk->bnthk", amat, vc)
+    intra = intra + diag[..., None] * vc
+
+    # inter-chunk: scan chunk states S_n = diag(exp(ltot)) S_{n-1} + kappa_end^T V
+    bmat = jnp.einsum("bnjhk,bnjhv->bnhkv", kappa_end, vc)  # (B,N,H,K,V)
+    amat_c = jnp.exp(ltot)                                   # (B,N,H,K)
+
+    def combine(lhs, rhs):
+        a_l, b_l = lhs
+        a_r, b_r = rhs
+        return a_l * a_r, a_r[..., None] * b_l + b_r
+
+    a_sc, b_sc = jax.lax.associative_scan(combine, (amat_c, bmat), axis=1)
+    # state *entering* chunk n is the scanned value of chunk n-1 (zero for n=0)
+    s_in = jnp.concatenate(
+        [jnp.zeros_like(b_sc[:, :1]), b_sc[:, :-1]], axis=1
+    )  # (B,N,H,K,V)
+    final_state = b_sc[:, -1]
+    if s0 is not None:
+        s0f = s0.astype(jnp.float32)
+        a_excl = jnp.concatenate(
+            [jnp.ones_like(a_sc[:, :1]), a_sc[:, :-1]], axis=1
+        )  # exclusive decay prefix per chunk (B,N,H,K)
+        s_in = s_in + a_excl[..., None] * s0f[:, None]
+        final_state = final_state + a_sc[:, -1][..., None] * s0f
+    inter = jnp.einsum("bnthk,bnhkv->bnthv", q_, s_in)
+    out = (intra + inter).reshape(b, n * c, h, kd)[:, :s]
+    return out, final_state
+
+
+def _wkv_step(state, r, k, v, logw, u):
+    """Sequential single-token WKV.  state: (B,H,K,V); r,k,v,logw: (B,H,K)."""
+    rf, kf, vf, w = (t.astype(jnp.float32) for t in (r, k, v, logw))
+    kv = kf[..., :, None] * vf[..., None, :]                  # (B,H,K,V)
+    out = jnp.einsum(
+        "bhk,bhkv->bhv", rf, state + u.astype(jnp.float32)[None, :, :, None] * kv
+    )
+    new_state = jnp.exp(w)[..., None] * state + kv
+    return out, new_state
+
+
+def _group_norm(x, scale, eps=1e-5):
+    """Per-head layernorm of (B,S,H,K)."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * scale
+
+
+def time_mix_apply(params, cfg, x, state: Optional[dict] = None):
+    """RWKV6 time-mix.  x: (B,S,d).  Returns (out, new_state_parts)."""
+    r_cfg = cfg.rwkv
+    b, s, d = x.shape
+    hd = r_cfg.head_dim
+    n_heads = d // hd
+
+    prev = state["shift_tm"] if state is not None else jnp.zeros((b, d), dtype=x.dtype)
+    xs = _token_shift(x, prev.astype(x.dtype))
+    mixed = _ddlerp(params, x, xs)  # (B,S,5,d)
+    xw, xk, xv, xr, xg = (mixed[..., i, :] for i in range(5))
+
+    r = apply_linear(params["wr"], xr)
+    k = apply_linear(params["wk"], xk)
+    v = apply_linear(params["wv"], xv)
+    g = jax.nn.silu((xg @ params["wg_a"].astype(x.dtype)) @ params["wg_b"].astype(x.dtype))
+
+    decay_raw = params["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw.astype(jnp.float32) @ params["wd_a"]) @ params["wd_b"]
+    )
+    logw = -jnp.exp(decay_raw)
+    logw = jnp.clip(logw, -DECAY_CLAMP, -1e-4)
+
+    split = lambda t: t.reshape(b, s, n_heads, hd)
+    rh, kh, vh, lwh = split(r), split(k), split(v), split(logw)
+
+    if state is None:
+        out, wkv_state = _wkv_chunked(rh, kh, vh, lwh, params["u"])
+    elif s == 1:
+        out, wkv_state = _wkv_step(
+            state["wkv"], rh[:, 0], kh[:, 0], vh[:, 0], lwh[:, 0], params["u"]
+        )
+        out = out[:, None]
+    else:  # prefill with an incoming state (serving)
+        out, wkv_state = _wkv_chunked(rh, kh, vh, lwh, params["u"], s0=state["wkv"])
+
+    out = _group_norm(out, params["ln_out_scale"].astype(jnp.float32))
+    out = out.reshape(b, s, d).astype(x.dtype) * g
+    out = apply_linear(params["wo"], out)
+    new_state = {"wkv": wkv_state, "shift_tm": x[:, -1].astype(jnp.float32)}
+    return out, new_state
+
+
+def init_rwkv_channel_mix(key, cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "mu_k": normal_init(k1, (d,), 0.02),
+        "mu_r": normal_init(k2, (d,), 0.02),
+        "wk": init_linear(k3, d, ff),
+        "wv": init_linear(k4, ff, d),
+        "wr": init_linear(jax.random.fold_in(key, 7), d, d),
+    }
+
+
+def channel_mix_apply(params, cfg, x, state: Optional[dict] = None, peft: Optional[dict] = None, lora_scale: float = 1.0):
+    b, s, d = x.shape
+    peft = peft or {}
+    prev = state["shift_cm"] if state is not None else jnp.zeros((b, d), dtype=x.dtype)
+    xs = _token_shift(x, prev.astype(x.dtype))
+    xk = x + (xs - x) * params["mu_k"].astype(x.dtype)
+    xr = x + (xs - x) * params["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(apply_linear(params["wk"], xk, peft.get("up"), lora_scale)))
+    kv = apply_linear(params["wv"], k, peft.get("down"), lora_scale)
+    out = jax.nn.sigmoid(apply_linear(params["wr"], xr)) * kv
+    new_state = {"shift_cm": x[:, -1].astype(jnp.float32)}
+    return out, new_state
+
+
+def wkv_sequential_ref(r, k, v, logw, u):
+    """Oracle: token-by-token WKV recurrence (B,S,H,K) -> (B,S,H,V)."""
+    b, s, h, kd = r.shape
+    state = jnp.zeros((b, h, kd, kd), dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        o, state = _wkv_step(state, r[:, t], k[:, t], v[:, t], logw[:, t], u)
+        outs.append(o)
+    return jnp.stack(outs, axis=1), state
+
+
+def init_rwkv_state(cfg, batch: int):
+    d = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    return {
+        "wkv": jnp.zeros((batch, d // hd, hd, hd), dtype=jnp.float32),
+        "shift_tm": jnp.zeros((batch, d), dtype=jnp.float32),
+        "shift_cm": jnp.zeros((batch, d), dtype=jnp.float32),
+    }

@@ -1,0 +1,11 @@
+from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm, sgdm_init, sgdm_update
+from repro.optim.schedules import make_lr_schedule
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "sgdm_init",
+    "sgdm_update",
+    "make_lr_schedule",
+]

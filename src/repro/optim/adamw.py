@@ -1,0 +1,71 @@
+"""AdamW and SGD-momentum, functional pytree optimizers.
+
+The paper's setting (AdamW, BF16 numerics for the base model, fp32 optimizer
+states on the PEFT params only — the frozen base holds no optimizer state,
+which is exactly the memory argument of paper Fig. 3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def adamw_update(
+    grads,
+    state,
+    params,
+    *,
+    lr,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+):
+    count = state["count"] + 1
+    b1c = 1.0 - beta1 ** count.astype(jnp.float32)
+    b2c = 1.0 - beta2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m2 = beta1 * m + (1 - beta1) * g
+        v2 = beta2 * v + (1 - beta2) * jnp.square(g)
+        step = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + eps)
+        new_p = p.astype(jnp.float32) - lr * (step + weight_decay * p.astype(jnp.float32))
+        return m2, v2, new_p.astype(p.dtype)
+
+    flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    m = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": m, "v": v, "count": count}
+
+
+def sgdm_init(params):
+    return {"mom": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)}
+
+
+def sgdm_update(grads, state, params, *, lr, momentum: float = 0.9):
+    def upd(g, m, p):
+        m2 = momentum * m + g.astype(jnp.float32)
+        return m2, (p.astype(jnp.float32) - lr * m2).astype(p.dtype)
+
+    flat = jax.tree.map(upd, grads, state["mom"], params)
+    mom = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"mom": mom}

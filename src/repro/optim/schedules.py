@@ -1,0 +1,24 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_lr_schedule(kind: str, base_lr: float, warmup_steps: int, total_steps: int):
+    def sched(step):
+        step = jnp.asarray(step, dtype=jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / jnp.maximum(warmup_steps, 1))
+        frac = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        if kind == "cosine":
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        elif kind == "linear":
+            decay = 1.0 - frac
+        elif kind == "constant":
+            decay = 1.0
+        else:
+            raise ValueError(f"unknown schedule {kind!r}")
+        return base_lr * warm * decay
+
+    return sched

@@ -1,0 +1,3 @@
+from repro.serving.decode import generate, sharded_decode_attention
+
+__all__ = ["generate", "sharded_decode_attention"]

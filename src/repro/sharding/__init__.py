@@ -1,0 +1,9 @@
+from repro.sharding.specs import (
+    batch_spec,
+    cache_specs,
+    param_specs,
+    peft_specs,
+    to_shardings,
+)
+
+__all__ = ["param_specs", "peft_specs", "cache_specs", "batch_spec", "to_shardings"]

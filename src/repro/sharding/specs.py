@@ -1,0 +1,208 @@
+"""Name- and divisibility-driven PartitionSpec rules.
+
+Megatron-style tensor parallel over the ``model`` axis with automatic
+fallback: a rule proposes which dim of a weight to shard; if that dim is not
+divisible by the model-axis size the engine tries the rule's fallback dims
+and finally replicates.  This is what lets one rule set cover all 10
+assigned architectures (llama4's 40 heads, whisper's 6 heads, granite's 40
+experts / 49155 vocab all hit fallbacks — see DESIGN.md §4).
+
+Conventions:
+  * column-parallel (shard output dim):   wq wk wv gate up router embed
+  * row-parallel (shard input dim):       wo down out_proj lm_head-ish
+  * expert-parallel: leading expert dim of stacked expert weights
+  * PEFT params are replicated (tiny; keeps aggregation collective-free)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# rule table: ordered-subsequence key-path match -> ordered dim preferences
+# to shard on the "model" axis.  First divisible dim wins; rules are tried
+# top-to-bottom, so specific rules (channel_mix) precede generic ones (wv).
+_RULES = [
+    # (path substrings (ordered subsequence), rank, dim preference order)
+    (("channel_mix", "wk", "w"), 2, (1,)),
+    (("channel_mix", "wv", "w"), 2, (0,)),
+    (("experts", "gate"), 3, (0, 2, 1)),
+    (("experts", "up"), 3, (0, 2, 1)),
+    (("experts", "down"), 3, (0, 1, 2)),
+    (("router",), 2, (1,)),
+    (("embed",), 2, (0, 1)),
+    (("lm_head",), 2, (1, 0)),
+    (("pos_embed",), 2, (1,)),
+    (("wq", "w"), 2, (1, 0)),
+    (("wk", "w"), 2, (1,)),
+    (("wv", "w"), 2, (1,)),
+    (("wo", "w"), 2, (0, 1)),
+    (("gate", "w"), 2, (1,)),
+    (("up", "w"), 2, (1,)),
+    (("down", "w"), 2, (0,)),
+    (("in_proj", "w"), 2, (1,)),
+    (("out_proj", "w"), 2, (0,)),
+    (("x_proj", "w"), 2, (0,)),
+    (("dt_proj", "w"), 2, (1,)),
+    (("conv_w",), 2, (1,)),
+    (("conv_b",), 1, (0,)),
+    (("A_log",), 2, (0,)),
+    (("D",), 1, (0,)),
+    (("time_mix", "wr", "w"), 2, (1,)),
+]
+
+
+def _path_parts(path) -> tuple:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return tuple(parts)
+
+
+def _match(parts: tuple, needles: tuple) -> bool:
+    it = iter(parts)
+    return all(any(n == part for part in it) for n in needles)
+
+
+def _spec_with_dim(shape, dim: int, tp: int, extra_leading: int = 0):
+    dim = dim % len(shape)
+    spec = [None] * (len(shape) + extra_leading)
+    spec[dim + extra_leading] = "model"
+    return P(*spec)
+
+
+def spec_for_param(path, shape, tp: int, extra_leading: int = 0, expert_shard: str = "auto") -> P:
+    """PartitionSpec for one weight leaf.  ``extra_leading`` accounts for a
+    stacked layer dim prepended by scan-mode stacking.
+
+    ``expert_shard='ff'`` shards stacked expert weights on the within-expert
+    dim instead of the expert dim — required by the decode weight-gather
+    path, where a per-token ``take`` over an expert-sharded dim would
+    all-gather every cold expert (EXPERIMENTS.md §Perf C)."""
+    parts = _path_parts(path)
+    if any("peft" == p for p in parts):
+        return P()
+    for needles, rank, prefs in _RULES:
+        if expert_shard == "ff" and needles[0] == "experts":
+            # drop the leading expert-dim preference
+            prefs = tuple(d for d in prefs if d != 0) + (0,)
+        if len(shape) - extra_leading == rank and _match(parts, needles):
+            for dim in prefs:
+                if shape[dim + extra_leading] % tp == 0 and shape[dim + extra_leading] >= tp:
+                    return _spec_with_dim(shape, dim, tp, extra_leading)
+            return P()
+    # fallback: biases/norms replicate; big 2D+ weights shard last divisible dim
+    if len(shape) - extra_leading >= 2:
+        for dim in range(len(shape) - 1, extra_leading - 1, -1):
+            if shape[dim] % tp == 0 and shape[dim] >= tp and shape[dim] >= 1024:
+                spec = [None] * len(shape)
+                spec[dim] = "model"
+                return P(*spec)
+    return P()
+
+
+def param_specs(params, tp: int, extra_leading: int = 0, fsdp_axes: tuple = (), expert_shard: str = "auto"):
+    """Pytree of PartitionSpecs mirroring ``params``.
+
+    ``fsdp_axes``: data-parallel mesh axes to additionally shard parameters
+    over (ZeRO-3 style — legitimate for a frozen PEFT base, which carries no
+    optimizer state; GSPMD inserts the per-layer all-gathers).  Applied to
+    the first still-unsharded dim of every large leaf that divides the axis
+    product.
+    """
+    n_fsdp = _axes_size(fsdp_axes) if fsdp_axes else 1
+
+    def leaf_spec(path, leaf):
+        spec = spec_for_param(path, leaf.shape, tp, extra_leading, expert_shard)
+        if n_fsdp <= 1 or leaf.size < 1 << 20:
+            return spec
+        spec_list = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for dim in range(len(leaf.shape)):
+            if spec_list[dim] is None and leaf.shape[dim] % n_fsdp == 0 and leaf.shape[dim] >= n_fsdp:
+                spec_list[dim] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+                break
+        return P(*spec_list)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def peft_specs(peft_tree):
+    """PEFT params replicate (see module docstring)."""
+    return jax.tree.map(lambda _: P(), peft_tree)
+
+
+def batch_spec(batch_axes: tuple, ndim: int, *, batch_dim: int = 0) -> P:
+    spec = [None] * ndim
+    spec[batch_dim] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    return P(*spec)
+
+
+def cache_specs(caches, batch_axes: tuple, tp: int, *, shard_seq_on_data: bool = False):
+    """Specs for decode caches.
+
+    Attention caches (B, S, KV, HD): batch over the data axes; KV heads over
+    ``model`` when divisible (else head_dim, else replicate).  When B == 1
+    (``long_500k``) ``shard_seq_on_data=True`` shards the *sequence* dim over
+    the data axes instead (distributed long-context decode, DESIGN.md §7).
+    Recurrent states (mamba/rwkv) shard batch + their channel dim.
+    """
+
+    def leaf_spec(path, leaf):
+        parts = _path_parts(path)
+        shape = leaf.shape
+        name = parts[-1] if parts else ""
+        if name == "pos" or len(shape) == 0:
+            return P()
+        b_ax = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+        if name in ("k", "v") and len(shape) == 4:
+            b, s, kv, hd = shape
+            spec = [None, None, None, None]
+            if shard_seq_on_data and b == 1:
+                spec[1] = b_ax
+            elif b % _axes_size(batch_axes) == 0 and b >= _axes_size(batch_axes):
+                spec[0] = b_ax
+            if kv % tp == 0 and kv >= tp:
+                spec[2] = "model"
+            elif hd % tp == 0 and hd >= tp:
+                spec[3] = "model"
+            return P(*spec)
+        # recurrent states: (B, ...channels...)
+        spec = [None] * len(shape)
+        if shape[0] % _axes_size(batch_axes) == 0 and shape[0] >= _axes_size(batch_axes):
+            spec[0] = b_ax
+        for dim in range(len(shape) - 1, 0, -1):
+            if shape[dim] % tp == 0 and shape[dim] >= tp and shape[dim] >= 256:
+                spec[dim] = "model"
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, caches)
+
+
+_MESH_AXES_SIZES = {}
+
+
+def set_mesh_axis_sizes(mesh):
+    """Record axis sizes so spec builders can check divisibility."""
+    global _MESH_AXES_SIZES
+    _MESH_AXES_SIZES = dict(mesh.shape)
+
+
+def _axes_size(axes: tuple) -> int:
+    n = 1
+    for a in axes:
+        n *= _MESH_AXES_SIZES.get(a, 1)
+    return n
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

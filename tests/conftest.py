@@ -1,0 +1,14 @@
+import jax
+import pytest
+
+# Smoke tests and benches must see the single real CPU device (the 512-device
+# override lives ONLY inside launch/dryrun.py, which runs as its own process).
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration tests")

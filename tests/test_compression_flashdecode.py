@@ -1,0 +1,115 @@
+"""Tests for the uplink compressors, flash-decode kernel, block-STLD."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.federated.compression import (
+    ErrorFeedback,
+    compressed_bytes,
+    dequantize_int8,
+    int8_roundtrip,
+    quantize_int8,
+    topk_sparsify,
+)
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.serving.decode import _partial_attention
+
+
+# --------------------------------------------------------------- compression
+def test_int8_roundtrip_error(key):
+    tree = {"a": 0.1 * jax.random.normal(key, (64, 8)), "b": jnp.linspace(-2, 2, 32)}
+    v, s = quantize_int8(tree)
+    back = dequantize_int8(v, s)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        rel = float(jnp.sqrt(jnp.mean((x - y) ** 2)) / (jnp.std(x) + 1e-9))
+        assert rel < 0.01
+    assert all(x.dtype == jnp.int8 for x in jax.tree.leaves(v))
+
+
+def test_compressed_bytes_ratio(key):
+    tree = {"w": jnp.zeros((1000,))}
+    full = 1000 * 4
+    assert compressed_bytes(tree, int8=True) < 0.3 * full
+    assert compressed_bytes(tree, int8=False, sparsity=0.1) < 0.9 * full
+
+
+def test_topk_sparsify(key):
+    x = {"w": jax.random.normal(key, (100,))}
+    sp = topk_sparsify(x, 0.1)
+    nz = int(jnp.sum(sp["w"] != 0))
+    assert 10 <= nz <= 12
+    kept = jnp.abs(sp["w"])[sp["w"] != 0]
+    dropped_max = jnp.max(jnp.abs(jnp.where(sp["w"] == 0, x["w"], 0)))
+    assert float(jnp.min(kept)) >= float(dropped_max) - 1e-6
+
+
+def test_error_feedback_unbiased_over_rounds(key):
+    """With EF, the cumulative transmitted signal converges to the cumulative
+    true signal (residual stays bounded)."""
+    true = {"w": 0.01 * jax.random.normal(key, (256,))}
+    residual = ErrorFeedback.init(true)
+    sent_sum = jnp.zeros((256,))
+    for i in range(20):
+        sent, residual = ErrorFeedback.compress(true, residual, int8_roundtrip)
+        sent_sum = sent_sum + sent["w"]
+    total_err = float(jnp.max(jnp.abs(sent_sum - 20 * true["w"])))
+    # residual bounded by one quantization step
+    assert total_err < float(jnp.max(jnp.abs(true["w"]))) * 0.2 + 1e-4
+
+
+# --------------------------------------------------------------- flash decode
+@pytest.mark.parametrize(
+    "b,h,kv,d,s,qpos,window,bk",
+    [
+        (2, 4, 2, 32, 100, 80, None, 32),
+        (1, 8, 8, 64, 64, 63, None, 64),
+        (1, 4, 4, 32, 96, 90, 24, 32),   # sliding window
+    ],
+)
+def test_flash_decode_vs_partial_attention(key, b, h, kv, d, s, qpos, window, bk):
+    q = jax.random.normal(key, (b, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, d))
+    kpos = jnp.arange(s)
+    out = flash_decode_pallas(q, k, v, kpos, qpos, window=window, block_k=bk)
+
+    rep = h // kv
+    kk = jnp.repeat(k, rep, axis=2)
+    vv = jnp.repeat(v, rep, axis=2)
+    acc, m, l = _partial_attention(q, kk, vv, kpos, qpos, window)
+    expect = acc / l[..., None]
+    np.testing.assert_allclose(out, expect.astype(out.dtype), atol=3e-5)
+
+
+def test_flash_decode_ring_positions(key):
+    """Wrapped ring-buffer slot positions mask correctly."""
+    b, h, d, s = 1, 2, 16, 32
+    q = jax.random.normal(key, (b, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, d))
+    # ring holding absolute positions 40..71 permuted modulo 32
+    kpos = 40 + jnp.mod(jnp.arange(s) - 40, s)
+    out = flash_decode_pallas(q, k, v, kpos, 71, block_k=16)
+    acc, m, l = _partial_attention(q, k, v, kpos, 71, None)
+    np.testing.assert_allclose(out, (acc / l[..., None]).astype(out.dtype), atol=3e-5)
+
+
+# ------------------------------------------------------------------ block stld
+@given(bs=st.sampled_from([2, 4]), mean=st.floats(0.2, 0.8))
+@settings(max_examples=10, deadline=None)
+def test_block_stld_structure(bs, mean):
+    from repro.core.stld import sample_drops_block
+
+    key = jax.random.PRNGKey(int(mean * 100) + bs)
+    rates = jnp.full((12,), mean)
+    drops = sample_drops_block(key, rates, bs, min_active=1)
+    d = np.asarray(drops)
+    assert (~d).sum() >= 1
+    # within each full block, gates agree except where min-active forcing hit
+    forced = (~d).sum() == 1 and d.sum() == 11
+    if not forced:
+        for i in range(0, 12 - bs + 1, bs):
+            blk = d[i : i + bs]
+            assert blk.all() or (~blk).any()

@@ -1,0 +1,103 @@
+"""Dry-run tooling: HLO collective parser, roofline math, mesh factory."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def test_collective_bytes_parser():
+    # import without triggering the XLA_FLAGS override side effects (the
+    # env var only matters before jax device init; jax is already live here)
+    from repro.launch.dryrun import collective_bytes
+
+    hlo = """
+  %ar = f32[128,256] all-reduce(%x), replica_groups={}
+  %ag.1 = bf16[4,1024] all-gather(%y), dimensions={1}
+  %a2a = (f32[16,16], f32[16,16]) all-to-all(%p, %q)
+  %cp = u32[8] collective-permute(%z), source_target_pairs={{0,1}}
+  %dot = f32[128,128] dot(%a, %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 128 * 256 * 4
+    assert out["all-gather"] == 4 * 1024 * 2
+    assert out["all-to-all"] == 2 * 16 * 16 * 4
+    assert out["collective-permute"] == 8 * 4
+    assert out["count"] == 4
+    assert out["total"] == sum(
+        out[k] for k in ("all-reduce", "all-gather", "all-to-all", "collective-permute", "reduce-scatter")
+    )
+
+
+def test_roofline_model_flops_orders():
+    from benchmarks.roofline import model_flops
+
+    # train >> prefill >> decode for the same arch
+    t = model_flops("yi-6b", "train_4k")
+    p = model_flops("yi-6b", "prefill_32k")
+    d = model_flops("yi-6b", "decode_32k")
+    assert t > p / 10 and p > d  # train_4k ~1M tokens; prefill 1M; decode 128
+    # dense 6B: train flops ~ 4*N*tokens within 2x
+    n = 6e9
+    tokens = 256 * 4096
+    assert 0.3 < t / (4 * n * tokens) < 3
+
+
+def test_roofline_row_dominant_term():
+    from benchmarks.roofline import roofline_row
+
+    rec = {
+        "arch": "yi-6b",
+        "shape": "decode_32k",
+        "mesh": "16x16",
+        "chips": 256,
+        "stld_mode": "off",
+        "flops": 1e14,  # large enough to beat the analytic memory-lb term
+        "bytes_accessed": 1e9,
+        "collectives": {"total": 1e6},
+        "memory": {"peak_bytes": 2**30, "argument_bytes": 2**30},
+    }
+    row = roofline_row(rec)
+    assert row["dominant"] == "compute"
+    assert row["t_compute_s"] == pytest.approx(1e14 / 197e12)
+    assert row["t_memory_s"] > 0  # analytic lower bound engaged
+
+
+def test_mesh_factory_shapes():
+    """make_production_mesh needs 512 host devices -> subprocess."""
+    code = (
+        "import os; os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=512';"
+        "from repro.launch.mesh import make_production_mesh;"
+        "m1 = make_production_mesh();"
+        "assert dict(m1.shape) == {'data': 16, 'model': 16}, m1.shape;"
+        "m2 = make_production_mesh(multi_pod=True);"
+        "assert dict(m2.shape) == {'pod': 2, 'data': 16, 'model': 16}, m2.shape;"
+        "print('ok')"
+    )
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert out.returncode == 0 and "ok" in out.stdout, out.stderr[-2000:]
+
+
+@pytest.mark.slow
+def test_dryrun_artifacts_if_present():
+    """When the sweep has run, every artifact must be ok or a sanctioned skip."""
+    d = "results/dryrun"
+    if not os.path.isdir(d) or not os.listdir(d):
+        pytest.skip("dry-run sweep not executed in this environment")
+    from repro.configs import LONG_CONTEXT_SKIPS
+
+    bad = []
+    for name in os.listdir(d):
+        with open(os.path.join(d, name)) as f:
+            rec = json.load(f)
+        if rec.get("ok"):
+            continue
+        if rec.get("skipped") and rec["arch"] in LONG_CONTEXT_SKIPS:
+            continue
+        bad.append(name)
+    assert not bad, f"failed dry-run cells: {bad}"

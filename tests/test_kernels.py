@@ -1,0 +1,131 @@
+"""Per-kernel shape/dtype sweeps + hypothesis property tests vs ref oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+_ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 3e-2}
+
+
+def _tol(dtype):
+    return _ATOL[jnp.bfloat16] if dtype == jnp.bfloat16 else _ATOL[jnp.float32]
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kv,s,d,causal,window,bq,bk",
+    [
+        (2, 4, 4, 64, 32, True, None, 32, 32),
+        (1, 4, 2, 100, 64, True, None, 32, 32),   # GQA + padding
+        (2, 2, 2, 128, 32, True, 48, 32, 32),     # sliding window
+        (1, 2, 2, 96, 64, False, None, 64, 32),   # bidirectional
+        (1, 1, 1, 17, 128, True, None, 128, 128), # single block, pad
+    ],
+)
+def test_flash_attention_sweep(key, dtype, b, h, kv, s, d, causal, window, bq, bk):
+    q = jax.random.normal(key, (b, h, s, d), dtype=dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, kv, s, d), dtype=dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, kv, s, d), dtype=dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window, block_q=bq, block_k=bk)
+    expect = ops.flash_attention(q, k, v, causal=causal, window=window, impl="xla")
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32), atol=_tol(dtype)
+    )
+
+
+@given(
+    s=st.integers(4, 150),
+    d=st.sampled_from([16, 32, 64]),
+    h=st.integers(1, 4),
+    causal=st.booleans(),
+)
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_property(s, d, h, causal):
+    key = jax.random.PRNGKey(s * 7 + d)
+    q = jax.random.normal(key, (1, h, s, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, h, s, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, h, s, d))
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    expect = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, expect, atol=3e-5)
+
+
+# ------------------------------------------------------------------- wkv6
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,k,chunk", [(2, 50, 3, 16, 16), (1, 16, 1, 32, 16), (2, 33, 2, 64, 16)])
+def test_wkv6_sweep(key, dtype, b, s, h, k, chunk):
+    r = (0.5 * jax.random.normal(key, (b, s, h, k))).astype(dtype)
+    kk = (0.5 * jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, k))).astype(dtype)
+    v = (0.5 * jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, k))).astype(dtype)
+    logw = jnp.clip(-jnp.exp(jax.random.normal(jax.random.fold_in(key, 3), (b, s, h, k))), -4.0, -1e-4).astype(dtype)
+    u = (0.3 * jax.random.normal(jax.random.fold_in(key, 4), (h, k))).astype(dtype)
+    out = ops.wkv6(r, kk, v, logw, u, chunk=chunk)
+    expect = ref.wkv6_ref(r, kk, v, logw, u)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32), atol=_tol(dtype), rtol=1e-2
+    )
+
+
+@given(s=st.integers(1, 70), k=st.sampled_from([8, 16]), decay=st.floats(0.1, 3.5))
+@settings(max_examples=10, deadline=None)
+def test_wkv6_property(s, k, decay):
+    key = jax.random.PRNGKey(s * 13 + k)
+    b, h = 1, 2
+    r = 0.5 * jax.random.normal(key, (b, s, h, k))
+    kk = 0.5 * jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, k))
+    v = 0.5 * jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, k))
+    logw = jnp.full((b, s, h, k), -decay)
+    u = jnp.zeros((h, k))
+    out = ops.wkv6(r, kk, v, logw, u)
+    expect = ref.wkv6_ref(r, kk, v, logw, u)
+    np.testing.assert_allclose(out, expect, atol=1e-4, rtol=1e-3)
+
+
+# ------------------------------------------------------------------ mamba
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,d,n,chunk,dblk", [(2, 70, 32, 8, 16, 16), (1, 64, 64, 16, 64, 32)])
+def test_mamba_scan_sweep(key, dtype, b, s, d, n, chunk, dblk):
+    dt = jax.nn.softplus(jax.random.normal(key, (b, s, d))).astype(dtype)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (b, s, d), dtype=dtype)
+    bm = jax.random.normal(jax.random.fold_in(key, 2), (b, s, n), dtype=dtype)
+    cm = jax.random.normal(jax.random.fold_in(key, 3), (b, s, n), dtype=dtype)
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 4), (d, n))).astype(jnp.float32)
+    dv = jax.random.normal(jax.random.fold_in(key, 5), (d,), dtype=jnp.float32)
+    out = ops.mamba_scan(dt, x, bm, cm, a, dv, chunk=chunk, d_block=dblk)
+    expect = ref.mamba_scan_ref(dt, x, bm, cm, a, dv)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32), atol=_tol(dtype), rtol=2e-2
+    )
+
+
+# ------------------------------------------------------------- lora matmul
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,r", [(100, 64, 72, 8), (32, 128, 128, 4), (128, 32, 40, 16)])
+def test_lora_matmul_sweep(key, dtype, m, k, n, r):
+    x = jax.random.normal(key, (m, k), dtype=dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), dtype=dtype)
+    a = jax.random.normal(jax.random.fold_in(key, 2), (k, r), dtype=dtype)
+    b = jax.random.normal(jax.random.fold_in(key, 3), (r, n), dtype=dtype)
+    out = ops.lora_matmul(x, w, a, b, alpha=0.5, block_m=32, block_n=32)
+    expect = ref.lora_matmul_ref(x, w, a, b, alpha=0.5)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32),
+        atol=_tol(dtype) * 10, rtol=2e-2,
+    )
+
+
+@given(alpha=st.floats(0.0, 4.0))
+@settings(max_examples=8, deadline=None)
+def test_lora_matmul_alpha_linearity(alpha):
+    key = jax.random.PRNGKey(42)
+    x = jax.random.normal(key, (16, 24))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (24, 16))
+    a = jax.random.normal(jax.random.fold_in(key, 2), (24, 4))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (4, 16))
+    y = ops.lora_matmul(x, w, a, b, alpha=alpha, block_m=16, block_n=16)
+    base = ops.lora_matmul(x, w, a, jnp.zeros_like(b), alpha=alpha, block_m=16, block_n=16)
+    np.testing.assert_allclose(y - base, alpha * (x @ a) @ b, atol=1e-4)

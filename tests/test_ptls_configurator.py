@@ -1,0 +1,74 @@
+"""PTLS (Eq. 6, Fig. 8) and the bandit configurator (Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ptls
+from repro.core.configurator import OnlineConfigurator
+
+
+def test_importance_accumulator_eq6():
+    acc = ptls.ImportanceAccumulator.init(3)
+    # batch 1: layer 0,2 active with norms [1,9,5]; layer 1 dropped
+    acc = ptls.ImportanceAccumulator.update(acc, jnp.array([1.0, 9.0, 5.0]), jnp.array([0.0, 1.0, 0.0]))
+    # batch 2: all active, norms [3, 2, 1]
+    acc = ptls.ImportanceAccumulator.update(acc, jnp.array([3.0, 2.0, 1.0]), jnp.zeros(3))
+    imp = np.asarray(ptls.ImportanceAccumulator.importance(acc))
+    np.testing.assert_allclose(imp, [2.0, 2.0, 3.0])
+
+
+def test_shared_layer_mask_lowest_importance():
+    imp = jnp.array([5.0, 1.0, 3.0, 0.5])
+    mask = np.asarray(ptls.shared_layer_mask(imp, 2))
+    assert mask.tolist() == [False, True, False, True]
+
+
+def test_masked_layer_mean_overlap_and_keep():
+    # 3 devices, 2 layers; layer 1 shared by devices 0,2; layer 0 by nobody
+    prev = [{"w": jnp.zeros((2,))}, {"w": jnp.full((2,), -1.0)}]
+    updates = [
+        jax.tree.map(lambda *xs: jnp.stack(xs), *[{"w": jnp.full((2,), float(i))} for i in range(3)])
+        for _ in range(2)
+    ]
+    masks = jnp.array([[False, True], [False, False], [False, True]])
+    out = ptls.masked_layer_mean(updates, masks, prev)
+    np.testing.assert_allclose(out[0]["w"], prev[0]["w"])  # nobody shared -> keep
+    np.testing.assert_allclose(out[1]["w"], jnp.full((2,), 1.0))  # mean(0, 2)
+
+
+def test_layer_grad_norms():
+    grads = [{"a": jnp.array([3.0, 4.0])}, {}, {"b": jnp.array([1.0]), "c": jnp.array([2.0, 2.0])}]
+    norms = np.asarray(ptls.layer_grad_norms(grads))
+    np.testing.assert_allclose(norms, [5.0, 0.0, 3.0])
+
+
+def test_configurator_converges_to_best_arm():
+    cfgor = OnlineConfigurator(
+        rate_grid=(0.1, 0.5, 0.9), startup=(0.1, 0.5, 0.9),
+        num_candidates=3, explore_rate=0.34, explore_interval=3, seed=0,
+    )
+    # ground truth: reward peaks at 0.5
+    def reward(r):
+        return 1.0 - (r - 0.5) ** 2 + 0.01 * np.random.default_rng(int(r * 10)).standard_normal()
+
+    picks = []
+    for _ in range(30):
+        rates = cfgor.next_round(4)
+        gains = [reward(r) for r in rates]
+        times = [1.0] * 4
+        cfgor.report(rates, gains, times)
+        picks.extend(rates)
+    assert cfgor.best_rate() == pytest.approx(0.5)
+    # exploitation phases should make 0.5 the most-used arm
+    assert max(set(picks), key=picks.count) == 0.5
+
+
+def test_configurator_phase_alternation():
+    cfgor = OnlineConfigurator(startup=(0.2, 0.6), num_candidates=2, explore_rate=0.5, explore_interval=2)
+    phases = []
+    for _ in range(10):
+        phases.append(cfgor.is_explore)
+        rates = cfgor.next_round(2)
+        cfgor.report(rates, [0.1] * 2, [1.0] * 2)
+    assert True in phases and False in phases

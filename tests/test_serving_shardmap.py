@@ -1,0 +1,48 @@
+"""The sequence-sharded LSE-combined decode under a REAL multi-device
+shard_map (8 forced host devices, subprocess so the main test process keeps
+its single-device view)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_CODE = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import jax, jax.numpy as jnp, numpy as np
+from repro.serving.decode import sharded_decode_attention, _partial_attention
+
+mesh = jax.make_mesh((8,), ('data',))
+key = jax.random.PRNGKey(0)
+b, h, d, s = 1, 4, 16, 64
+q = jax.random.normal(key, (b, h, d))
+k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, d))
+v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, d))
+kpos = jnp.arange(s)
+qpos = 50
+
+out = sharded_decode_attention(mesh, q, k, v, kpos, qpos)
+acc, m, l = _partial_attention(q, k, v, kpos, qpos, None)
+mono = acc / l[..., None]
+err = float(jnp.max(jnp.abs(out - mono.astype(out.dtype))))
+assert err < 1e-5, err
+
+# windowed variant
+outw = sharded_decode_attention(mesh, q, k, v, kpos, qpos, window=16)
+accw, mw, lw = _partial_attention(q, k, v, kpos, qpos, 16)
+monow = accw / lw[..., None]
+errw = float(jnp.max(jnp.abs(outw - monow.astype(outw.dtype))))
+assert errw < 1e-5, errw
+print('ok', err, errw)
+"""
+
+
+def test_sharded_decode_attention_8dev():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", _CODE], capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=300,
+    )
+    assert out.returncode == 0 and "ok" in out.stdout, out.stderr[-3000:]

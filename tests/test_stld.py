@@ -1,0 +1,125 @@
+"""STLD core: sampling statistics, gating semantics, schedules, gather mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import stld
+from repro.core.schedules import drop_rates, unit_shape
+from repro.models import init_params, model_apply
+
+
+def test_expected_active_layers():
+    rates = jnp.array([0.0, 0.5, 1.0, 0.25])
+    assert float(stld.expected_active_layers(rates)) == pytest.approx(2.25)
+
+
+def test_sample_drops_statistics(key):
+    rates = jnp.array([0.1, 0.5, 0.9] * 4)
+    keys = jax.random.split(key, 2000)
+    drops = jax.vmap(lambda k: stld.sample_drops(k, rates, 1))(keys)
+    freq = np.asarray(jnp.mean(drops.astype(jnp.float32), axis=0))
+    np.testing.assert_allclose(freq, np.asarray(rates), atol=0.05)
+
+
+def test_sample_drops_min_active(key):
+    rates = jnp.full((6,), 0.95)
+    keys = jax.random.split(key, 500)
+    drops = jax.vmap(lambda k: stld.sample_drops(k, rates, 2))(keys)
+    active = np.asarray(jnp.sum(~drops, axis=1))
+    assert active.min() >= 2
+
+
+def test_sample_active_indices_sorted_unique(key):
+    rates = unit_shape("incremental", 12) * 0.5
+    idx = stld.sample_active_indices(key, jnp.clip(rates, 0, 0.95), 5)
+    idx = np.asarray(idx)
+    assert len(np.unique(idx)) == 5
+    assert (np.sort(idx) == idx).all()
+
+
+@given(mean=st.floats(0.05, 0.9), L=st.integers(2, 64))
+@settings(max_examples=30, deadline=None)
+def test_drop_rates_mean_property(mean, L):
+    for dist in ("uniform", "incremental", "decay"):
+        r = np.asarray(drop_rates(dist, mean, L))
+        assert (r >= 0).all() and (r <= 0.95).all()
+        # mean preserved when no clipping occurred
+        if r.max() < 0.95 - 1e-6:
+            assert abs(r.mean() - mean) < 1e-4
+
+
+def test_incremental_monotone_decay_antitone():
+    inc = np.asarray(drop_rates("incremental", 0.4, 10))
+    dec = np.asarray(drop_rates("decay", 0.4, 10))
+    assert (np.diff(inc) >= -1e-7).all()
+    assert (np.diff(dec) <= 1e-7).all()
+
+
+def test_static_active_count():
+    assert stld.static_active_count(0.5, 24, bucket=4) == 12
+    assert stld.static_active_count(0.9, 24, bucket=4) == 4
+    assert stld.static_active_count(0.99, 24, bucket=1, min_active=2) == 2
+    assert stld.static_active_count(0.0, 24) == 24
+
+
+def test_gate_skip_is_identity(key):
+    h = jax.random.normal(key, (2, 3, 8))
+    cache = {"x": jnp.ones((2, 2))}
+    block = lambda hh, cc: (hh * 2.0, jnp.ones(()), jax.tree.map(lambda t: t + 1, cc))
+    h1, aux1, c1 = stld.gate(block, jnp.array(True), h, cache)
+    np.testing.assert_allclose(h1, h)
+    assert float(aux1) == 0.0
+    np.testing.assert_allclose(c1["x"], cache["x"])
+    h2, aux2, c2 = stld.gate(block, jnp.array(False), h, cache)
+    np.testing.assert_allclose(h2, h * 2.0)
+    assert float(aux2) == 1.0
+
+
+def test_all_dropped_reduces_to_head_only(key):
+    cfg = get_config("yi-6b", smoke=True).replace(num_layers=3, dtype="float32")
+    params = init_params(key, cfg)
+    batch = {"tokens": jax.random.randint(key, (2, 8), 0, cfg.vocab_size)}
+    drops = jnp.ones((3,), dtype=bool)
+    logits, _, _ = model_apply(params, cfg, batch, drops=drops)
+    # equals embed -> final_norm -> head with no layers
+    cfg0 = cfg.replace(num_layers=0)
+    params0 = dict(params, layers=[])
+    logits0, _, _ = model_apply(params0, cfg0, batch)
+    np.testing.assert_allclose(logits, logits0, atol=1e-5)
+
+
+def test_gather_equals_cond_for_same_active_set(key):
+    cfg = get_config("glm4-9b", smoke=True).replace(num_layers=4, dtype="float32")
+    params = init_params(key, cfg)
+    batch = {"tokens": jax.random.randint(key, (2, 8), 0, cfg.vocab_size)}
+    active = jnp.array([0, 2])
+    drops = jnp.array([False, True, False, True])
+    lg, _, _ = model_apply(params, cfg, batch, stack_mode="gather", active_idx=active)
+    lc, _, _ = model_apply(params, cfg, batch, drops=drops)
+    np.testing.assert_allclose(lg, lc, atol=1e-5)
+
+
+def test_gather_grads_zero_for_dropped_layers(key):
+    from repro.configs import PEFTConfig
+    from repro.core import peft as peft_lib
+
+    cfg = get_config("yi-6b", smoke=True).replace(num_layers=4, dtype="float32")
+    params = init_params(key, cfg)
+    peft = peft_lib.init_peft(key, cfg, PEFTConfig(method="lora", lora_rank=2))
+    batch = {"tokens": jax.random.randint(key, (2, 8), 0, cfg.vocab_size)}
+    active = jnp.array([1, 3])
+
+    def loss(pf):
+        lo, _, _ = model_apply(
+            params, cfg, batch, peft=pf, stack_mode="gather", active_idx=active
+        )
+        return jnp.mean(lo**2)
+
+    g = jax.grad(loss)(peft)
+    for l in (0, 2):  # dropped layers get exactly zero grads
+        assert all(float(jnp.abs(x).max()) == 0.0 for x in jax.tree.leaves(g[l]))
+    for l in (1, 3):
+        assert any(float(jnp.abs(x).max()) > 0.0 for x in jax.tree.leaves(g[l]))
