@@ -1,0 +1,137 @@
+"""Cohort execution engine bench: sequential per-device loop vs the batched
+``cohort_round`` engine.
+
+Primary metric (asserted): wall-clock of one full cohort round through
+``FederatedSimulator._run_cohort`` — local training + validation for the
+whole 8-device cohort, i.e. exactly the component the batched engine
+replaces.  Workload: the smoke model config (8 layers, d=64) with
+FedSGD-style single-local-step rounds (1 step x batch 4 x seq 8) over small
+near-uniform shards — the cross-device emulation regime the engine targets:
+per-device compute is small, so the sequential loop's per-device costs (two
+jit dispatches with ~100-leaf pytrees, host-side optimizer init, stacking,
+blocking accuracy syncs) dominate, and one fused jit'd call over the
+stacked cohort amortizes all of it.  Gather-mode STLD with a fixed rate
+(DropPEFT-b2 ablation) keeps one static active-count group, so the two
+modes' compiled graphs do identical math and the comparison is pure
+execution strategy.  On heavy per-device workloads this 2-core CPU
+container is element-throughput-bound and the two modes converge —
+accelerators are where the compute side of the batched engine pays off; the
+end-to-end simulator comparison is reported alongside for transparency.
+
+Like ``kernel_bench`` the portable signal is CSV rows (stdout); a JSON
+summary line with the measured speedups is emitted as well so downstream
+tooling can parse the claim directly.  The acceptance claim — batched >= 2x
+faster than sequential for an 8-device cohort — is asserted on the engine
+metric (surfaces as CLAIM_VIOLATION through benchmarks.run on failure).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import cost_model_cfg, emit, sim_model_cfg, train_cfg
+from repro.configs import FederatedConfig, PEFTConfig, STLDConfig
+from repro.data import make_task
+from repro.federated.simulator import FederatedSimulator
+
+_DEVICES = 8
+
+
+def _make_sim(mode: str, seed: int = 0) -> FederatedSimulator:
+    fed = FederatedConfig(
+        num_devices=_DEVICES,
+        devices_per_round=_DEVICES,
+        local_steps=1,
+        batch_size=4,
+        # near-uniform shards: batched evaluation pads every device's val
+        # batch to the cohort max, so a skewed partition would make the
+        # batched engine evaluate more rows than the sequential loop does
+        dirichlet_alpha=1000.0,
+    )
+    return FederatedSimulator(
+        sim_model_cfg(),
+        PEFTConfig(method="lora", lora_rank=4, adapter_dim=8),
+        STLDConfig(mode="gather", mean_rate=0.5),
+        fed,
+        train_cfg(),
+        strategy="droppeft_b2",  # fixed rate: one static gather group
+        cost_cfg=cost_model_cfg(),
+        seed=seed,
+        cohort_mode=mode,
+        task=make_task(num_examples=128, vocab_size=512, seq_len=8, seed=seed),
+    )
+
+
+def run(quick: bool = False):
+    reps = 3 if quick else 10
+    trials = 1 if quick else 3
+    e2e_rounds = 4 if quick else 8
+    sims = {mode: _make_sim(mode) for mode in ("sequential", "batched")}
+    num_classes = jnp.arange(sims["batched"].task.num_classes)
+    cohort = list(range(_DEVICES))
+    rates = [0.5] * _DEVICES
+
+    # ---------------------------------------------- engine: one cohort round
+    engine = {mode: float("inf") for mode in sims}
+    for sim in sims.values():  # compile/warm both paths
+        sim._run_cohort(cohort, rates, num_classes, sim.cfg.num_layers)
+    # interleave trials and keep per-mode minima: the shared container's
+    # background load is additive noise that min-of-trials filters out
+    for _ in range(trials):
+        for mode, sim in sims.items():
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                outs = sim._run_cohort(cohort, rates, num_classes, sim.cfg.num_layers)
+                jax.block_until_ready([o[0] for o in outs])
+            engine[mode] = min(engine[mode], (time.perf_counter() - t0) / reps)
+    for mode in engine:
+        emit(
+            f"cohort/engine_{mode}",
+            engine[mode] * 1e6,
+            f"devices={_DEVICES};reps={reps};trials={trials};smoke-config;steps1xb4xs8",
+        )
+    engine_speedup = engine["sequential"] / engine["batched"]
+    emit("cohort/engine_speedup", 0.0, f"x{engine_speedup:.2f}")
+
+    # ------------------------------- end-to-end simulator rounds (reported)
+    e2e = {}
+    curves = {}
+    for mode, sim in sims.items():
+        t0 = time.perf_counter()
+        curves[mode] = sim.run(rounds=e2e_rounds)
+        e2e[mode] = time.perf_counter() - t0
+        emit(f"cohort/e2e_{mode}", e2e[mode] / e2e_rounds * 1e6, f"rounds={e2e_rounds}")
+    # the two modes must also be running the SAME experiment (parity)
+    parity = bool(
+        np.allclose(curves["sequential"].loss, curves["batched"].loss, atol=1e-4)
+        and np.allclose(curves["sequential"].accuracy, curves["batched"].accuracy, atol=1e-5)
+    )
+    emit("cohort/e2e_speedup", 0.0, f"x{e2e['sequential']/e2e['batched']:.2f};curves_match={parity}")
+
+    print(
+        json.dumps(
+            {
+                "bench": "cohort",
+                "devices": _DEVICES,
+                "engine_sequential_ms": round(engine["sequential"] * 1e3, 2),
+                "engine_batched_ms": round(engine["batched"] * 1e3, 2),
+                "engine_speedup": round(engine_speedup, 2),
+                "e2e_speedup": round(e2e["sequential"] / e2e["batched"], 2),
+                "curves_match": parity,
+            }
+        )
+    )
+    assert parity, "batched and sequential modes diverged for identical seeds"
+    if not quick:
+        assert engine_speedup >= 2.0, (
+            f"batched cohort engine only {engine_speedup:.2f}x faster than the "
+            f"sequential loop (claim: >= 2x for an {_DEVICES}-device cohort)"
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -12,6 +12,7 @@ import time
 import traceback
 
 from benchmarks import (
+    cohort_bench,
     fig2_breakdown,
     fig3_memory,
     fig6_dropout_sweep,
@@ -26,6 +27,7 @@ from benchmarks import (
 )
 
 BENCHES = {
+    "cohort": cohort_bench.run,
     "table1": table1_overhead.run,
     "fig2": fig2_breakdown.run,
     "fig3": fig3_memory.run,

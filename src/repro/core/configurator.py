@@ -23,6 +23,8 @@ import random
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
+import numpy as np
+
 
 _ARM_MEMORY = 3  # recent evaluations kept per arm (staleness, paper Line 12)
 
@@ -72,8 +74,13 @@ class OnlineConfigurator:
         self._round = 0
 
     # ------------------------------------------------------------------ api
-    def next_round(self, n_devices: int) -> List[float]:
-        """Dropout mean-rates for this round's cohort."""
+    def next_round(self, n_devices: int, *, as_array: bool = False):
+        """Dropout mean-rates for this round's cohort.
+
+        ``as_array=True`` returns an (N,) float32 vector ready to feed the
+        batched cohort engine; otherwise a plain python list.  ``report``
+        accepts either form back (float32 round-trips snap to their arms).
+        """
         if self.is_explore:
             if not self.list_c:
                 self._refill_candidates()
@@ -82,10 +89,20 @@ class OnlineConfigurator:
         else:
             rates = [self.best_rate()] * n_devices
         self._pending = sorted(set(rates))
+        if as_array:
+            return np.asarray(rates, dtype=np.float32)
         return rates
 
     def report(self, rates: Sequence[float], acc_gains: Sequence[float], times: Sequence[float]):
-        """Per-device rewards R = dA / T (Eq. 5)."""
+        """Per-device rewards R = dA / T (Eq. 5).
+
+        Accepts python lists or numpy/jax vectors (the batched engine hands
+        back float32 arrays); rates are snapped to their exact arm keys so a
+        float32 round-trip cannot mint duplicate arms.
+        """
+        rates = [self._snap_rate(float(r)) for r in np.asarray(rates).ravel()]
+        acc_gains = [float(g) for g in np.asarray(acc_gains).ravel()]
+        times = [float(t) for t in np.asarray(times).ravel()]
         self._round += 1
         for r, da, t in zip(rates, acc_gains, times):
             arm = self.arms.setdefault(r, ArmStats(rate=r))
@@ -118,6 +135,16 @@ class OnlineConfigurator:
         return max(self.arms.values(), key=lambda a: a.reward).rate
 
     # ------------------------------------------------------------- internals
+    def _snap_rate(self, r: float) -> float:
+        """Map a (possibly float32-degraded) rate back to its exact arm key."""
+        candidates = set(self.rate_grid) | set(self.arms) | set(self.list_c) | set(
+            getattr(self, "_pending", ())
+        )
+        if not candidates:
+            return r
+        best = min(candidates, key=lambda c: abs(c - r))
+        return best if abs(best - r) < 1e-5 else r
+
     def _refill_candidates(self):
         n_explore = max(1, int(self.num_candidates * self.explore_rate))
         fresh = [r for r in self.rate_grid if r not in self.arms]

@@ -1,18 +1,28 @@
 """Client-side local fine-tuning with STLD (paper §3.1-3.2).
 
-``make_client_fns`` builds the jit'd per-round programs:
+``make_client_fns`` builds the jit'd per-round programs and returns them as a
+:class:`ClientFns` namedtuple:
 
-* ``local_round`` — ``lax.scan`` over local mini-batch steps; each step
+* ``local_round``  — ``lax.scan`` over local mini-batch steps; each step
   draws fresh STLD gates (Bernoulli per layer, or gather-mode indices),
   computes PEFT-only grads, AdamW-updates the PEFT tree, and accumulates
   the Eq.-6 PTLS importance statistics.
-* ``evaluate``   — full-model (no dropout) classification accuracy on the
+* ``evaluate``     — full-model (no dropout) classification accuracy on the
   device's local validation split.
+* ``cohort_round`` — the batched cohort engine: ``jax.vmap`` of the local
+  round over a leading device axis.  One jit'd call trains a whole cohort
+  from stacked per-device batches, a per-device ``mean_rate`` vector, split
+  PRNG keys, and per-device global-step offsets.  Each device starts from a
+  fresh AdamW state (exactly what the simulator does per round), so the
+  optimizer state never crosses the device axis.
+* ``cohort_evaluate`` — vmapped validation over the device axis.  Val shards
+  have heterogeneous sizes, so batches arrive padded to a common size with a
+  ``valid`` row mask; the masked mean equals the per-device plain mean.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +32,15 @@ from repro.core import ptls, stld
 from repro.core.schedules import unit_shape
 from repro.models.losses import softmax_xent
 from repro.models.registry import model_apply
-from repro.optim import adamw_update, clip_by_global_norm, make_lr_schedule
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, make_lr_schedule
+
+
+class ClientFns(NamedTuple):
+    local_round: Callable
+    evaluate: Callable
+    cohort_round: Callable
+    cohort_evaluate: Callable
+    cohort_round_eval: Callable
 
 
 def _model_batch(cfg, tokens):
@@ -43,7 +61,7 @@ def _logits_for_tokens(cfg, logits, tokens):
     return logits
 
 
-def make_client_fns(cfg, peft_cfg, stld_cfg, train_cfg, *, stack_mode: str = "unroll"):
+def make_client_fns(cfg, peft_cfg, stld_cfg, train_cfg, *, stack_mode: str = "unroll") -> ClientFns:
     lora_sc = peft_lib.lora_scale(peft_cfg) if peft_cfg.method == "lora" else 1.0
     sched = make_lr_schedule(
         train_cfg.schedule, train_cfg.learning_rate, train_cfg.warmup_steps, train_cfg.total_steps
@@ -68,8 +86,7 @@ def make_client_fns(cfg, peft_cfg, stld_cfg, train_cfg, *, stack_mode: str = "un
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
-    @partial(jax.jit, static_argnames=("num_active",))
-    def local_round(
+    def _local_round(
         base_params,
         peft_params,
         opt_state,
@@ -129,10 +146,37 @@ def make_client_fns(cfg, peft_cfg, stld_cfg, train_cfg, *, stack_mode: str = "un
         importance = ptls.ImportanceAccumulator.importance(imp)
         return peft_params, opt_state, metrics, importance
 
-    @jax.jit
-    def evaluate(base_params, peft_params, tokens, labels, num_classes_arr):
-        """Classification accuracy: argmax over label-token logits at the
-        final position (synthetic task protocol)."""
+    local_round = jax.jit(_local_round, static_argnames=("num_active",))
+
+    @partial(jax.jit, static_argnames=("num_active",))
+    def cohort_round(
+        base_params,
+        peft_stack,     # PEFT pytree with leading (N,) device axis on every leaf
+        batch_stack,    # dict of (N, steps, ...) arrays
+        rates,          # (N,) per-device mean dropout rates
+        rngs,           # (N, 2) split PRNG keys, one per device
+        global_steps,   # (N,) per-device LR-schedule offsets
+        num_active: Optional[int] = None,
+    ):
+        """Train the whole cohort in one call: vmap of ``local_round``.
+
+        ``num_active`` is static (gather mode); a cohort with heterogeneous
+        static counts must be partitioned into same-count groups by the
+        caller (the simulator does this).  Returns stacked
+        ``(peft_stack, metrics, importances)``.
+        """
+
+        def one(peft_params, batches, rate, rng, gstep):
+            opt0 = adamw_init(peft_params)
+            peft_p, _, metrics, importance = _local_round(
+                base_params, peft_params, opt0, batches, rate, rng, gstep, num_active
+            )
+            return peft_p, metrics, importance
+
+        return jax.vmap(one)(peft_stack, batch_stack, rates, rngs, global_steps)
+
+    def _class_logits(base_params, peft_params, tokens, num_classes_arr):
+        """Label-token logits at the final position (synthetic task protocol)."""
         logits, _, _ = model_apply(
             base_params,
             cfg,
@@ -143,8 +187,61 @@ def make_client_fns(cfg, peft_cfg, stld_cfg, train_cfg, *, stack_mode: str = "un
         )
         logits = _logits_for_tokens(cfg, logits, tokens)
         final = logits[:, -1].astype(jnp.float32)  # (B, V)
-        class_logits = final[:, 1 : 1 + num_classes_arr.shape[0]]
+        return final[:, 1 : 1 + num_classes_arr.shape[0]]
+
+    @jax.jit
+    def evaluate(base_params, peft_params, tokens, labels, num_classes_arr):
+        """Classification accuracy: argmax over label-token logits at the
+        final position (synthetic task protocol)."""
+        class_logits = _class_logits(base_params, peft_params, tokens, num_classes_arr)
         pred = jnp.argmax(class_logits, axis=-1)
         return jnp.mean((pred == labels).astype(jnp.float32))
 
-    return local_round, evaluate
+    def _masked_accuracy(base_params, peft_params, toks, labs, v, num_classes_arr):
+        class_logits = _class_logits(base_params, peft_params, toks, num_classes_arr)
+        pred = jnp.argmax(class_logits, axis=-1)
+        correct = (pred == labs).astype(jnp.float32) * v
+        return jnp.sum(correct) / jnp.maximum(jnp.sum(v), 1.0)
+
+    @jax.jit
+    def cohort_evaluate(base_params, peft_stack, tokens, labels, valid, num_classes_arr):
+        """Per-device accuracies (N,) from padded (N, B, S) val batches;
+        ``valid`` is the (N, B) row mask for the padding."""
+
+        def one(peft_params, toks, labs, v):
+            return _masked_accuracy(base_params, peft_params, toks, labs, v, num_classes_arr)
+
+        return jax.vmap(one)(peft_stack, tokens, labels, valid)
+
+    @partial(jax.jit, static_argnames=("num_active",))
+    def cohort_round_eval(
+        base_params,
+        peft_stack,
+        batch_stack,
+        rates,
+        rngs,
+        global_steps,
+        val_tokens,
+        val_labels,
+        val_valid,
+        num_classes_arr,
+        num_active: Optional[int] = None,
+    ):
+        """Fused cohort train + validation: one dispatch per round so the
+        per-call overhead (arg flattening of the ~100-leaf base tree, program
+        launch) is paid once for the whole cohort instead of 2N times."""
+
+        def one(peft_params, batches, rate, rng, gstep, toks, labs, v):
+            opt0 = adamw_init(peft_params)
+            peft_p, _, metrics, importance = _local_round(
+                base_params, peft_params, opt0, batches, rate, rng, gstep, num_active
+            )
+            acc = _masked_accuracy(base_params, peft_p, toks, labs, v, num_classes_arr)
+            return peft_p, metrics, importance, acc
+
+        return jax.vmap(one)(
+            peft_stack, batch_stack, rates, rngs, global_steps,
+            val_tokens, val_labels, val_valid,
+        )
+
+    return ClientFns(local_round, evaluate, cohort_round, cohort_evaluate, cohort_round_eval)

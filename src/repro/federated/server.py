@@ -7,9 +7,12 @@
 * ``hetlora_aggregate`` — FedHetLoRA baseline: rank-heterogeneous LoRA
                           updates zero-padded to the max rank then
                           sparsity-weighted averaged.
+* ``cohort_shared_masks`` — batched PTLS: per-device share masks from a
+                          stacked (N, L) importance matrix in one jit'd call.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import List, Sequence
 
 import jax
@@ -17,6 +20,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ptls
+
+
+@partial(jax.jit, static_argnames=("k",))
+def cohort_shared_masks(importances, k: int):
+    """(N, L) importances -> (N, L) bool share masks (Eq. 6 / Fig. 8).
+
+    Row n is ``ptls.shared_layer_mask(importances[n], k)``: the k
+    lowest-importance layers each device uploads.  vmapped so the whole
+    cohort's mask computation is a single dispatch when the batched engine
+    hands back stacked importances.
+    """
+    return jax.vmap(lambda imp: ptls.shared_layer_mask(imp, k))(importances)
 
 
 def fedavg(client_trees: Sequence) -> object:

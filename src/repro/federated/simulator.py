@@ -12,10 +12,34 @@ classification task:
 Wall-clock, memory, energy, and traffic come from the analytic SystemModel
 (Jetson profiles + fluctuating bandwidth), scaled by each round's *measured*
 active-layer fraction — the semi-emulation protocol of paper §6.1.
+
+Cohort execution modes
+----------------------
+
+``cohort_mode`` selects how one round's selected devices are trained:
+
+* ``"batched"`` — the batched cohort engine: per-device batches, dropout
+  rates, PRNG keys and LR-schedule offsets are stacked along a leading
+  device axis and one jit'd ``cohort_round`` (``jax.vmap`` of the local
+  round) trains the whole cohort; validation runs through the vmapped
+  ``cohort_evaluate`` on padded val batches.  In gather-mode STLD the static
+  active-layer count can differ per device, so the cohort is partitioned
+  into same-count groups and each group runs as one batched call.
+* ``"sequential"`` — the original per-device python loop, one jit'd
+  ``local_round`` dispatch per device.
+* ``"auto"`` (default) — ``batched`` for every rank-homogeneous strategy;
+  FedHetLoRA falls back to ``sequential`` because its per-device LoRA ranks
+  produce differently-shaped PEFT trees that cannot share one stacked vmap
+  axis.  Requesting ``batched`` together with ``hetlora`` raises.
+
+Both modes consume identical PRNG streams (one ``jax.random.split`` fan-out
+per round, bandwidths drawn in cohort order) and produce numerically
+matching per-device PEFT trees, metrics, and PTLS importances — see
+``tests/test_cohort_parity.py``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import jax
@@ -23,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import peft as peft_lib
-from repro.core import ptls
+from repro.core import stld as stld_lib
 from repro.core.configurator import OnlineConfigurator
 from repro.data import DeviceDataset, dirichlet_partition, make_task
 from repro.federated import server as server_lib
@@ -95,6 +119,7 @@ class FederatedSimulator:
         task=None,
         cost_cfg=None,
         seed: int = 0,
+        cohort_mode: str = "auto",
     ):
         self.cfg = cfg
         self.peft_cfg = peft_cfg
@@ -105,6 +130,17 @@ class FederatedSimulator:
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
 
+        if cohort_mode not in ("auto", "batched", "sequential"):
+            raise ValueError(f"unknown cohort_mode {cohort_mode!r}")
+        if cohort_mode == "batched" and self.strategy.hetlora:
+            raise ValueError(
+                "cohort_mode='batched' cannot stack hetlora's rank-heterogeneous "
+                "PEFT trees; use 'sequential' (or 'auto')"
+            )
+        if cohort_mode == "auto":
+            cohort_mode = "sequential" if self.strategy.hetlora else "batched"
+        self.cohort_mode = cohort_mode
+
         self.task = task or make_task(vocab_size=cfg.vocab_size, seed=seed)
         parts = dirichlet_partition(
             self.task.labels, fed_cfg.num_devices, fed_cfg.dirichlet_alpha, seed=seed
@@ -113,15 +149,22 @@ class FederatedSimulator:
             DeviceDataset(self.task, idx, seed=seed + i) for i, idx in enumerate(parts)
         ]
         self.device_profile = [sample_device(self.rng) for _ in range(fed_cfg.num_devices)]
+        # fixed val pad size so the jit'd cohort_evaluate signature is stable
+        self._val_pad = max(len(d.val_batch()["labels"]) for d in self.devices)
 
         self.key, k1, k2 = jax.random.split(self.key, 3)
         self.base_params = init_params(k1, cfg)
         self.global_peft = peft_lib.init_peft(k2, cfg, peft_cfg)
         self.device_peft: Dict[int, list] = {}
         stack_mode = default_stack_mode(cfg)
-        self.local_round, self.evaluate = make_client_fns(
+        self.client = make_client_fns(
             cfg, peft_cfg, stld_cfg, train_cfg, stack_mode=stack_mode
         )
+        self.local_round, self.evaluate = self.client.local_round, self.client.evaluate
+        # server aggregation is pure tree math: jit it so a round's
+        # aggregation is one dispatch instead of hundreds of tiny ops
+        self._fedavg = jax.jit(server_lib.fedavg)
+        self._ptls_aggregate = jax.jit(server_lib.ptls_aggregate)
         self.system = SystemModel(cost_cfg or cfg, peft_cfg)
         self.configurator = (
             OnlineConfigurator(
@@ -136,6 +179,10 @@ class FederatedSimulator:
             else None
         )
         self._prev_acc: Dict[int, float] = {}
+        self._last_mask: Dict[int, np.ndarray] = {}
+        self._unstack_cache: Dict[int, object] = {}
+        self._stack_cache: Dict[int, object] = {}
+        self._val_cache: Dict[int, dict] = {}
         self._global_step = 0
         if self.strategy.hetlora:
             # per-device LoRA rank from device capability tier
@@ -166,9 +213,14 @@ class FederatedSimulator:
         num_classes = jnp.arange(self.task.num_classes)
 
         for rnd in range(rounds):
-            cohort = self.rng.choice(
-                fed.num_devices, size=min(fed.devices_per_round, fed.num_devices), replace=False
-            )
+            cohort = [
+                int(d)
+                for d in self.rng.choice(
+                    fed.num_devices,
+                    size=min(fed.devices_per_round, fed.num_devices),
+                    replace=False,
+                )
+            ]
             n = len(cohort)
             if self.configurator is not None:
                 rates = self.configurator.next_round(n)
@@ -184,53 +236,45 @@ class FederatedSimulator:
                     2 + (rnd // self.strategy.adaopt_grow_every) * 2,
                 )
 
-            round_accs, round_losses, round_times = [], [], []
-            round_traffic = round_energy = 0.0
-            round_mem = 0.0
-            active_fracs = []
-            client_updates, client_masks, client_ranks = [], [], []
+            outs = self._run_cohort(cohort, rates, num_classes, adaopt_depth)
+            round_accs = [acc for _, _, _, acc in outs]
+            round_losses = [float(metrics["loss"]) for _, metrics, _, _ in outs]
+            active_fracs = [
+                float(metrics["active_layers"]) / self.cfg.num_layers
+                for _, metrics, _, _ in outs
+            ]
 
+            # share masks: batched importance -> per-device mask in one call
+            if self.strategy.ptls:
+                k = max(1, int(fed.ptls_share_fraction * self.cfg.num_layers))
+                importances = np.stack([np.asarray(imp) for _, _, imp, _ in outs])
+                masks = np.asarray(server_lib.cohort_shared_masks(importances, k))
+            else:
+                masks = np.ones((n, self.cfg.num_layers), dtype=bool)
+
+            client_updates = [peft_i for peft_i, _, _, _ in outs]
+            client_ranks = (
+                [self.device_rank[dev] for dev in cohort] if self.strategy.hetlora else []
+            )
             for i, dev in enumerate(cohort):
-                dev = int(dev)
-                out = self._run_device(
-                    dev, rates[i], num_classes, adaopt_depth
-                )
-                peft_i, metrics, importance, acc = out
-                active_frac = float(metrics["active_layers"]) / self.cfg.num_layers
-                active_fracs.append(active_frac)
-                round_accs.append(acc)
-                round_losses.append(float(metrics["loss"]))
+                self.device_peft[dev] = client_updates[i]
+                self._last_mask[dev] = masks[i]
 
-                if self.strategy.ptls:
-                    k = max(1, int(fed.ptls_share_fraction * self.cfg.num_layers))
-                    mask = np.asarray(ptls.shared_layer_mask(importance, k))
-                else:
-                    mask = np.ones((self.cfg.num_layers,), dtype=bool)
-                client_updates.append(peft_i)
-                client_masks.append(mask)
-                if self.strategy.hetlora:
-                    client_ranks.append(self.device_rank[dev])
-
-                share_frac = float(mask.mean())
-                cost = self.system.round_cost(
-                    device=self.device_profile[dev],
-                    bandwidth_mbps=sample_bandwidth(self.rng),
-                    batch=fed.batch_size,
-                    seq=self.task.seq_len,
-                    local_steps=fed.local_steps,
-                    peft=True,
-                    active_fraction=active_frac if self.strategy.stld else 1.0,
-                    share_fraction=share_frac,
-                )
-                round_times.append(cost.total_time_s)
-                round_traffic += cost.traffic_mb
-                round_energy += cost.energy_j
-                round_mem = max(round_mem, cost.memory_gb)
-
-                self.device_peft[dev] = peft_i
-                if not hasattr(self, "_last_mask"):
-                    self._last_mask = {}
-                self._last_mask[dev] = mask
+            # vectorized system-model accounting over the cohort
+            bandwidths = np.array([sample_bandwidth(self.rng) for _ in cohort])
+            cost = self.system.cohort_round_cost(
+                devices=[self.device_profile[dev] for dev in cohort],
+                bandwidth_mbps=bandwidths,
+                batch=fed.batch_size,
+                seq=self.task.seq_len,
+                local_steps=fed.local_steps,
+                peft=True,
+                active_fraction=(
+                    np.asarray(active_fracs) if self.strategy.stld else np.ones(n)
+                ),
+                share_fraction=masks.mean(axis=1),
+            )
+            round_times = cost.total_time_s
 
             # ---------------------------------------------------- aggregate
             if self.strategy.hetlora:
@@ -238,34 +282,33 @@ class FederatedSimulator:
                     client_updates, client_ranks, self.max_rank
                 )
             elif self.strategy.ptls:
-                masks = np.stack(client_masks)
-                self.global_peft = server_lib.ptls_aggregate(
+                self.global_peft = self._ptls_aggregate(
                     client_updates, masks, self.global_peft
                 )
             else:
-                self.global_peft = server_lib.fedavg(client_updates)
+                self.global_peft = self._fedavg(client_updates)
 
             # ------------------------------------------------------- report
-            round_wall = max(round_times)  # synchronous round
+            round_wall = float(round_times.max())  # synchronous round
             cum_time += round_wall
             mean_acc = float(np.mean(round_accs))
             if self.configurator is not None:
                 gains = []
                 for i, dev in enumerate(cohort):
-                    prev = self._prev_acc.get(int(dev), 1.0 / self.task.num_classes)
+                    prev = self._prev_acc.get(dev, 1.0 / self.task.num_classes)
                     gains.append(max(round_accs[i] - prev, 0.0))
                 self.configurator.report(rates, gains, round_times)
             for i, dev in enumerate(cohort):
-                self._prev_acc[int(dev)] = round_accs[i]
+                self._prev_acc[dev] = round_accs[i]
 
             hist["time"].append(cum_time)
             hist["acc"].append(mean_acc)
             hist["loss"].append(float(np.mean(round_losses)))
             hist["rate"].append(float(np.mean(rates)))
             hist["active"].append(float(np.mean(active_fracs)))
-            hist["traffic"].append(round_traffic)
-            hist["energy"].append(round_energy)
-            hist["memory"].append(round_mem)
+            hist["traffic"].append(float(cost.traffic_mb.sum()))
+            hist["energy"].append(float(cost.energy_j.sum()))
+            hist["memory"].append(float(cost.memory_gb.max()))
 
             if target_accuracy is not None and mean_acc >= target_accuracy:
                 break
@@ -299,55 +342,191 @@ class FederatedSimulator:
         return mixed
 
     def _is_shared(self, dev: int, l: int) -> bool:
-        mask = getattr(self, "_last_mask", {}).get(dev)
+        mask = self._last_mask.get(dev)
         return True if mask is None else bool(mask[l])
 
-    def _run_device(self, dev: int, rate: float, num_classes, adaopt_depth: int):
-        ds = self.devices[dev]
+    def _run_cohort(self, cohort, rates, num_classes, adaopt_depth):
+        """Train one round's cohort; returns a list (len N) of per-device
+        ``(peft, metrics, importance, accuracy)`` tuples.  Both modes draw
+        from identical PRNG streams: one split fan-out for the per-device
+        keys, per-device global-step offsets in cohort order."""
         fed = self.fed_cfg
-        start_peft = self._device_start_peft(dev)
+        n = len(cohort)
+        start_pefts = [self._device_start_peft(dev) for dev in cohort]
+        self.key, *keys = jax.random.split(self.key, n + 1)
+        gsteps = [self._global_step + i * fed.local_steps for i in range(n)]
+        self._global_step += n * fed.local_steps
+
+        if self.cohort_mode == "batched":
+            outs = self._run_cohort_batched(
+                cohort, rates, start_pefts, keys, gsteps, num_classes, adaopt_depth
+            )
+        else:
+            outs = [
+                self._run_device(
+                    cohort[i], rates[i], start_pefts[i], keys[i], gsteps[i],
+                    num_classes, adaopt_depth,
+                )
+                for i in range(n)
+            ]
+        return outs
+
+    def _adaopt_truncate(self, peft_i, start_peft, adaopt_depth: int):
+        """Progressive depth (FedAdaOPT): layers beyond the active depth keep
+        their incoming values — their adapter updates are discarded BEFORE
+        evaluation, so reported accuracy measures the retained model."""
+        return [
+            peft_i[l] if l < adaopt_depth else start_peft[l]
+            for l in range(self.cfg.num_layers)
+        ]
+
+    def _stacked_train_batches(self, dev: int):
+        fed = self.fed_cfg
+        batches = list(self.devices[dev].train_batches(fed.batch_size, fed.local_steps))
+        return {
+            k: np.stack([b[k] for b in batches]) for k in ("tokens", "targets", "mask")
+        }
+
+    def _padded_val_batch(self, dev: int):
+        """Val batch padded to the cohort-wide size with a validity mask.
+        Val splits are static, so the padded batch is built once per device."""
+        cached = self._val_cache.get(dev)
+        if cached is None:
+            val = self.devices[dev].val_batch()
+            b = len(val["labels"])
+            pad = self._val_pad - b
+            valid = np.zeros((self._val_pad,), dtype=np.float32)
+            valid[:b] = 1.0
+            cached = {
+                "tokens": np.pad(val["tokens"], ((0, pad), (0, 0))),
+                "labels": np.pad(val["labels"], (0, pad)),
+                "valid": valid,
+            }
+            self._val_cache[dev] = cached
+        return cached
+
+    def _static_active_counts(self, rates) -> List[Optional[int]]:
+        """Gather-mode static active-layer count per device (None in cond
+        mode).  Static counts partition the batched cohort into groups."""
+        if self.stld_cfg.mode == "gather" and self.strategy.stld:
+            return [
+                stld_lib.static_active_count(
+                    rate,
+                    self.cfg.num_layers,
+                    self.stld_cfg.gather_bucket,
+                    self.stld_cfg.min_active_layers,
+                )
+                for rate in rates
+            ]
+        return [None] * len(rates)
+
+    def _run_cohort_batched(
+        self, cohort, rates, start_pefts, keys, gsteps, num_classes, adaopt_depth
+    ):
+        """One (or few, in gather mode) jit'd calls train the whole cohort."""
+        n = len(cohort)
+        adaopt = self.strategy.adaopt and adaopt_depth < self.cfg.num_layers
+        batch_list = [self._stacked_train_batches(dev) for dev in cohort]
+        val_list = [self._padded_val_batch(dev) for dev in cohort]
+        num_active = self._static_active_counts(rates)
+
+        outs: List[Optional[tuple]] = [None] * n
+        for na in dict.fromkeys(num_active):
+            pos = [i for i in range(n) if num_active[i] == na]
+            peft_stack = self._stack_trees([start_pefts[i] for i in pos])
+            batch_stack = {
+                k: jnp.asarray(np.stack([batch_list[i][k] for i in pos]))
+                for k in ("tokens", "targets", "mask")
+            }
+            rate_arr = jnp.asarray([float(rates[i]) for i in pos], dtype=jnp.float32)
+            key_arr = jnp.stack([keys[i] for i in pos])
+            gstep_arr = jnp.asarray([gsteps[i] for i in pos], dtype=jnp.int32)
+            val_args = (
+                jnp.asarray(np.stack([val_list[i]["tokens"] for i in pos])),
+                jnp.asarray(np.stack([val_list[i]["labels"] for i in pos])),
+                jnp.asarray(np.stack([val_list[i]["valid"] for i in pos])),
+            )
+            if adaopt:
+                # progressive depth discards deep-layer updates before eval,
+                # so train and eval cannot be fused: train, truncate the
+                # stacked tree per layer, then evaluate the retained model
+                peft_out, metrics, importances = self.client.cohort_round(
+                    self.base_params, peft_stack, batch_stack,
+                    rate_arr, key_arr, gstep_arr, num_active=na,
+                )
+                peft_out = self._adaopt_truncate(peft_out, peft_stack, adaopt_depth)
+                accs = self.client.cohort_evaluate(
+                    self.base_params, peft_out, *val_args, num_classes
+                )
+            else:
+                peft_out, metrics, importances, accs = self.client.cohort_round_eval(
+                    self.base_params,
+                    peft_stack,
+                    batch_stack,
+                    rate_arr,
+                    key_arr,
+                    gstep_arr,
+                    *val_args,
+                    num_classes,
+                    num_active=na,
+                )
+            # one jit'd unstack + one host pull: per-leaf x[j] slicing and
+            # per-device float() syncs would cost hundreds of tiny dispatches
+            peft_list = self._unstack_tree(peft_out, len(pos))
+            metrics_np, imps_np, accs_np = jax.device_get((metrics, importances, accs))
+            for j, i in enumerate(pos):
+                dev_metrics = {k: v[j] for k, v in metrics_np.items()}
+                outs[i] = (peft_list[j], dev_metrics, imps_np[j], float(accs_np[j]))
+        return outs
+
+    def _stack_trees(self, trees):
+        """Stack a list of identically-shaped pytrees along a new leading
+        axis in ONE jit'd dispatch (cached per cohort-group size)."""
+        n = len(trees)
+        fn = self._stack_cache.get(n)
+        if fn is None:
+            fn = jax.jit(lambda *ts: jax.tree.map(lambda *xs: jnp.stack(xs), *ts))
+            self._stack_cache[n] = fn
+        return fn(*trees)
+
+    def _unstack_tree(self, tree, n: int):
+        """Split a leading-(n,) stacked pytree into n pytrees in ONE jit'd
+        dispatch (cached per cohort-group size)."""
+        fn = self._unstack_cache.get(n)
+        if fn is None:
+            fn = jax.jit(lambda t: tuple(jax.tree.map(lambda x: x[j], t) for j in range(n)))
+            self._unstack_cache[n] = fn
+        return fn(tree)
+
+    def _run_device(
+        self, dev: int, rate: float, start_peft, key, gstep: int, num_classes, adaopt_depth
+    ):
+        fed = self.fed_cfg
         if self.strategy.hetlora:
-            rank = self.device_rank[dev]
-            local_round, evaluate = self._het_fns[rank]
+            fns = self._het_fns[self.device_rank[dev]]
+            local_round, evaluate = fns.local_round, fns.evaluate
         else:
             local_round, evaluate = self.local_round, self.evaluate
 
-        batches = list(ds.train_batches(fed.batch_size, fed.local_steps))
         stacked = {
-            k: jnp.asarray(np.stack([b[k] for b in batches]))
-            for k in ("tokens", "targets", "mask")
+            k: jnp.asarray(v) for k, v in self._stacked_train_batches(dev).items()
         }
-        self.key, kr = jax.random.split(self.key)
         opt_state = adamw_init(start_peft)
-        num_active = None
-        if self.stld_cfg.mode == "gather" and self.strategy.stld:
-            from repro.core import stld as stld_lib
-
-            num_active = stld_lib.static_active_count(
-                rate, self.cfg.num_layers, self.stld_cfg.gather_bucket,
-                self.stld_cfg.min_active_layers,
-            )
+        num_active = self._static_active_counts([rate])[0]
         peft_i, _, metrics, importance = local_round(
             self.base_params,
             start_peft,
             opt_state,
             stacked,
             jnp.asarray(rate, dtype=jnp.float32),
-            kr,
-            jnp.asarray(self._global_step, dtype=jnp.int32),
+            key,
+            jnp.asarray(gstep, dtype=jnp.int32),
             num_active=num_active,
         )
-        self._global_step += fed.local_steps
-
         if self.strategy.adaopt and adaopt_depth < self.cfg.num_layers:
-            # progressive depth: layers beyond the active depth keep their
-            # incoming values (their adapter updates are discarded)
-            peft_i = [
-                peft_i[l] if l < adaopt_depth else start_peft[l]
-                for l in range(self.cfg.num_layers)
-            ]
+            peft_i = self._adaopt_truncate(peft_i, start_peft, adaopt_depth)
 
-        val = ds.val_batch()
+        val = self.devices[dev].val_batch()
         acc = float(
             evaluate(
                 self.base_params,
@@ -362,15 +541,30 @@ class FederatedSimulator:
     def final_accuracy(self, num_classes) -> float:
         """Paper protocol: mean accuracy across ALL devices' local test sets,
         each device using its personalized model (global for non-participants)."""
+        if self.cohort_mode == "batched" and not self.strategy.hetlora:
+            devs = range(self.fed_cfg.num_devices)
+            peft_stack = self._stack_trees(
+                [self.device_peft.get(dev, self.global_peft) for dev in devs]
+            )
+            vals = [self._padded_val_batch(dev) for dev in devs]
+            accs = self.client.cohort_evaluate(
+                self.base_params,
+                peft_stack,
+                jnp.asarray(np.stack([v["tokens"] for v in vals])),
+                jnp.asarray(np.stack([v["labels"] for v in vals])),
+                jnp.asarray(np.stack([v["valid"] for v in vals])),
+                num_classes,
+            )
+            return float(np.mean(np.asarray(accs)))
         accs = []
         for dev in range(self.fed_cfg.num_devices):
             peft_d = self.device_peft.get(dev, self.global_peft)
             if self.strategy.hetlora and dev not in self.device_peft:
                 peft_d = server_lib.truncate_lora_rank(self.global_peft, self.device_rank[dev])
-            _, evaluate = (
-                self._het_fns[self.device_rank[dev]]
+            evaluate = (
+                self._het_fns[self.device_rank[dev]].evaluate
                 if self.strategy.hetlora
-                else (None, self.evaluate)
+                else self.evaluate
             )
             val = self.devices[dev].val_batch()
             accs.append(

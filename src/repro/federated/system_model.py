@@ -14,7 +14,7 @@ scales upload traffic by the shared-layer fraction (paper §4).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -47,6 +47,21 @@ class RoundCost:
 
     @property
     def total_time_s(self) -> float:
+        return self.compute_time_s + self.comm_time_s
+
+
+@dataclass
+class CohortCost:
+    """Vectorized :class:`RoundCost` over a cohort: every field is (N,)."""
+
+    compute_time_s: np.ndarray
+    comm_time_s: np.ndarray
+    memory_gb: np.ndarray
+    energy_j: np.ndarray
+    traffic_mb: np.ndarray
+
+    @property
+    def total_time_s(self) -> np.ndarray:
         return self.compute_time_s + self.comm_time_s
 
 
@@ -179,28 +194,73 @@ class SystemModel:
         active_fraction: float = 1.0,
         share_fraction: float = 1.0,
     ) -> RoundCost:
-        prof = DEVICE_PROFILES[device]
-        tokens = batch * seq * local_steps
-        flops = tokens * self.flops_per_token(
-            training=True, peft=peft and not full_ft, active_fraction=active_fraction
-        )
-        compute_time = flops / prof.flops
-        bytes_ = self.comm_bytes(peft=peft and not full_ft, share_fraction=share_fraction)
-        comm_time = bytes_ * 8 / (bandwidth_mbps * 1e6)
-        mem = self.memory_breakdown(
+        cohort = self.cohort_round_cost(
+            devices=[device],
+            bandwidth_mbps=bandwidth_mbps,
             batch=batch,
             seq=seq,
-            peft=peft and not full_ft,
+            local_steps=local_steps,
+            peft=peft,
             full_ft=full_ft,
             active_fraction=active_fraction,
+            share_fraction=share_fraction,
         )
-        energy = prof.compute_watts * compute_time + prof.radio_watts * comm_time
         return RoundCost(
+            compute_time_s=float(cohort.compute_time_s[0]),
+            comm_time_s=float(cohort.comm_time_s[0]),
+            memory_gb=float(cohort.memory_gb[0]),
+            energy_j=float(cohort.energy_j[0]),
+            traffic_mb=float(cohort.traffic_mb[0]),
+        )
+
+    def cohort_round_cost(
+        self,
+        *,
+        devices: Sequence[str],
+        bandwidth_mbps,
+        batch: int = 16,
+        seq: int = 128,
+        local_steps: int = 4,
+        peft: bool = True,
+        full_ft: bool = False,
+        active_fraction=1.0,
+        share_fraction=1.0,
+    ) -> CohortCost:
+        """Vectorized :meth:`round_cost` over a whole cohort.
+
+        ``devices`` is a length-N list of profile names; ``bandwidth_mbps``,
+        ``active_fraction`` and ``share_fraction`` broadcast as (N,) arrays.
+        The per-token helpers are affine in those fractions, so they accept
+        arrays directly and the whole cohort's accounting is a handful of
+        numpy ops instead of N python calls.
+        """
+        n = len(devices)
+        af = np.broadcast_to(np.asarray(active_fraction, dtype=np.float64), (n,))
+        sf = np.broadcast_to(np.asarray(share_fraction, dtype=np.float64), (n,))
+        bw = np.broadcast_to(np.asarray(bandwidth_mbps, dtype=np.float64), (n,))
+        profs = [DEVICE_PROFILES[d] for d in devices]
+        cap = np.array([p.flops for p in profs])
+        compute_watts = np.array([p.compute_watts for p in profs])
+        radio_watts = np.array([p.radio_watts for p in profs])
+
+        tokens = batch * seq * local_steps
+        peft_train = peft and not full_ft
+        flops = tokens * self.flops_per_token(
+            training=True, peft=peft_train, active_fraction=af
+        )
+        compute_time = flops / cap
+        bytes_ = self.comm_bytes(peft=peft_train, share_fraction=sf)
+        comm_time = bytes_ * 8 / (bw * 1e6)
+        mem = self.memory_breakdown(
+            batch=batch, seq=seq, peft=peft_train, full_ft=full_ft, active_fraction=af
+        )
+        energy = compute_watts * compute_time + radio_watts * comm_time
+        return CohortCost(
             compute_time_s=compute_time,
             comm_time_s=comm_time,
-            memory_gb=mem.total_gb,
+            memory_gb=np.broadcast_to(np.asarray(mem.total_gb, dtype=np.float64), (n,)),
             energy_j=energy,
-            traffic_mb=bytes_ / 1024.0**2,
+            traffic_mb=np.broadcast_to(np.asarray(bytes_ / 1024.0**2, dtype=np.float64), (n,)),
         )
 
 

@@ -100,6 +100,9 @@ def moe_apply(params, cfg, x, group_size: Optional[int] = None, dispatch_mode: O
     gate_stack = gate_stack / denom
 
     # load-balance aux loss over the *first* choice (Switch convention).
+    # NOTE: minimized at 1 only in expectation / when frac_tokens aligns
+    # with mean_probs (Jensen); over a finite token sample the first-choice
+    # counts can anti-correlate with the mean probs and dip slightly below 1.
     frac_tokens = jnp.mean(masks[0], axis=1)          # (G, E)
     mean_probs = jnp.mean(probs, axis=1)              # (G, E)
     aux = e * jnp.mean(jnp.sum(frac_tokens * mean_probs, axis=-1))

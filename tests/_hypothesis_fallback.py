@@ -1,0 +1,93 @@
+"""``hypothesis`` when installed, a seeded ``parametrize`` fallback otherwise.
+
+The tier-1 container is offline and ships without the ``hypothesis`` wheel,
+which used to kill three modules at *collection*.  Property-test modules now
+import ``given`` / ``settings`` / ``st`` from here:
+
+* with hypothesis present these are the real objects — full shrinking,
+  fuzzing, the works;
+* without it, ``@given`` expands each strategy into a deterministic, seeded
+  example list (boundary values first, then uniform draws keyed on the test
+  name) and registers it via ``pytest.mark.parametrize``, so the same
+  properties still run everywhere as ordinary parametrized cases.
+
+Only the strategy combinators the suite actually uses are shimmed
+(``floats``, ``integers``, ``sampled_from``, ``booleans``).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+    import zlib
+
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        """A boundary-example list plus a seeded uniform sampler."""
+
+        def __init__(self, boundary, sample):
+            self.boundary = list(boundary)
+            self.sample = sample
+
+    class _StrategiesShim:
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                [min_value, max_value], lambda r: r.uniform(min_value, max_value)
+            )
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                [min_value, max_value], lambda r: r.randint(min_value, max_value)
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            xs = list(elements)
+            return _Strategy(xs, lambda r: r.choice(xs))
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True], lambda r: r.random() < 0.5)
+
+    st = _StrategiesShim()
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+        """Records ``max_examples`` for the ``@given`` shim; other knobs
+        (deadline, ...) are hypothesis-only and ignored."""
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        names = list(strats)
+
+        def deco(fn):
+            n = max(1, getattr(fn, "_max_examples", _DEFAULT_EXAMPLES))
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            cases = []
+            width = max(len(s.boundary) for s in strats.values())
+            for j in range(width):  # boundary grid first
+                cases.append(
+                    tuple(s.boundary[j % len(s.boundary)] for s in strats.values())
+                )
+            while len(cases) < n + width:  # then seeded uniform draws
+                cases.append(tuple(s.sample(rng) for s in strats.values()))
+            unique = list(dict.fromkeys(cases))[:n]
+            if len(names) == 1:  # parametrize wants scalars, not 1-tuples
+                unique = [c[0] for c in unique]
+            return pytest.mark.parametrize(",".join(names), unique)(fn)
+
+        return deco

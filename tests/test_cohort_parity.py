@@ -1,0 +1,112 @@
+"""Batched cohort engine == sequential per-device loop, and the
+configurator's vector-rate interface.
+
+The batched engine (``cohort_round`` = vmap of ``local_round``) must be a
+pure execution-strategy change: for identical seeds both modes consume the
+same PRNG streams and must produce numerically matching per-device PEFT
+trees, round metrics, PTLS importances, and accuracies.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FederatedConfig, PEFTConfig, STLDConfig, TrainConfig, get_config
+from repro.core.configurator import OnlineConfigurator
+from repro.federated.simulator import FederatedSimulator
+
+_CFG = get_config("qwen3-1.7b", smoke=True).replace(
+    num_layers=4, d_model=32, d_ff=64, num_heads=2, num_kv_heads=2,
+    vocab_size=128, dtype="float32",
+)
+_FED = FederatedConfig(num_devices=6, devices_per_round=4, local_steps=2, batch_size=8)
+_TRAIN = TrainConfig(learning_rate=5e-3, total_steps=100, warmup_steps=2)
+
+
+def _sim(mode, *, strategy="droppeft", stld_mode="cond", seed=3):
+    return FederatedSimulator(
+        _CFG,
+        PEFTConfig(method="lora", lora_rank=2),
+        STLDConfig(mode=stld_mode, mean_rate=0.5, gather_bucket=1),
+        _FED,
+        _TRAIN,
+        strategy=strategy,
+        seed=seed,
+        cohort_mode=mode,
+    )
+
+
+def _tree_allclose(a, b, atol=1e-5):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(
+            np.asarray(x, dtype=np.float64), np.asarray(y, dtype=np.float64), atol=atol
+        )
+
+
+@pytest.mark.parametrize("stld_mode", ["cond", "gather"])
+def test_cohort_round_parity(stld_mode):
+    """Per-device PEFT trees, metrics, importances, and accuracies match
+    between batched and sequential execution for the same PRNG keys.  The
+    gather case exercises the static-count cohort grouping (two groups)."""
+    sim_s = _sim("sequential", stld_mode=stld_mode)
+    sim_b = _sim("batched", stld_mode=stld_mode)
+    cohort = [0, 1, 2, 3]
+    rates = [0.25, 0.5, 0.25, 0.5]
+    num_classes = jnp.arange(sim_s.task.num_classes)
+
+    outs_s = sim_s._run_cohort(cohort, rates, num_classes, _CFG.num_layers)
+    outs_b = sim_b._run_cohort(cohort, rates, num_classes, _CFG.num_layers)
+    assert len(outs_s) == len(outs_b) == 4
+    for (p_s, m_s, imp_s, acc_s), (p_b, m_b, imp_b, acc_b) in zip(outs_s, outs_b):
+        _tree_allclose(p_s, p_b)
+        np.testing.assert_allclose(
+            np.asarray(imp_s), np.asarray(imp_b), atol=1e-4, rtol=1e-4
+        )
+        for k in ("loss", "accuracy", "active_layers"):
+            assert float(m_s[k]) == pytest.approx(float(m_b[k]), abs=1e-4)
+        assert acc_s == pytest.approx(acc_b, abs=1e-5)
+
+
+def test_full_run_parity_smoke():
+    """End-to-end: both modes trace identical accuracy/loss/cost curves."""
+    res_s = _sim("sequential").run(rounds=3)
+    res_b = _sim("batched").run(rounds=3)
+    np.testing.assert_allclose(res_s.accuracy, res_b.accuracy, atol=1e-5)
+    np.testing.assert_allclose(res_s.loss, res_b.loss, atol=1e-4)
+    np.testing.assert_allclose(res_s.cum_time_s, res_b.cum_time_s, rtol=1e-6)
+    np.testing.assert_allclose(res_s.active_fraction, res_b.active_fraction, atol=1e-5)
+    np.testing.assert_allclose(res_s.traffic_mb, res_b.traffic_mb, rtol=1e-6)
+    assert res_s.final_accuracy == pytest.approx(res_b.final_accuracy, abs=1e-5)
+
+
+def test_hetlora_forces_sequential_fallback():
+    sim = _sim("auto", strategy="fedhetlora")
+    assert sim.cohort_mode == "sequential"
+    with pytest.raises(ValueError):
+        _sim("batched", strategy="fedhetlora")
+
+
+def test_configurator_vector_rate_interface():
+    """Regression: per-device rate vectors (float32 arrays, as produced by
+    the batched engine) round-trip through next_round/report without minting
+    duplicate float32-drifted arms."""
+    cfgor = OnlineConfigurator(
+        rate_grid=(0.1, 0.3, 0.5),
+        startup=(0.1, 0.5),
+        num_candidates=2,
+        explore_rate=0.5,
+        explore_interval=2,
+        seed=0,
+    )
+    for _ in range(8):
+        rates = cfgor.next_round(4, as_array=True)
+        assert isinstance(rates, np.ndarray) and rates.dtype == np.float32
+        gains = np.full(4, 0.1, dtype=np.float32)
+        times = np.ones(4, dtype=np.float32)
+        cfgor.report(rates, gains, times)
+    grid = (0.1, 0.3, 0.5)
+    for arm_rate in cfgor.arms:
+        assert any(arm_rate == g for g in grid), f"drifted arm key {arm_rate!r}"
+    assert cfgor.best_rate() in grid

@@ -128,7 +128,25 @@ def test_moe_aux_loss_and_capacity(key):
     x = jax.random.normal(key, (2, 8, cfg.d_model), dtype=jnp.float32)
     out, aux = moe_apply(p, cfg, x)
     assert out.shape == x.shape
-    assert float(aux) >= 1.0 - 1e-3  # load-balance loss lower bound is 1 (balanced)
+    # The Switch loss E * sum_e f_e * p_e has NO deterministic >=1 bound:
+    # f (first-choice token counts) and p (mean softmax probs) only obey the
+    # Jensen bound E * sum p_e^2 >= 1 when they coincide, and over a finite
+    # token sample the argmax counts can anti-correlate with the mean probs.
+    # Principled assertions instead:
+    #  (1) a near-uniform random-init router lands within finite-sample
+    #      noise of the balanced value 1 (seeded tolerance);
+    assert float(aux) == pytest.approx(1.0, abs=0.05)
+    #  (2) an exactly-uniform router gives aux == 1 analytically, since
+    #      sum_e f_e / E = 1/E for ANY count vector f;
+    p_uni = dict(p, router={"w": jnp.zeros_like(p["router"]["w"])})
+    _, aux_uni = moe_apply(p_uni, cfg, x)
+    assert float(aux_uni) == pytest.approx(1.0, abs=1e-5)
+    #  (3) a sharpened router aligns f with p (near one-hot probs), so the
+    #      Jensen bound applies and imbalance strictly raises the loss.
+    p_sharp = dict(p, router={"w": p["router"]["w"] * 50.0})
+    _, aux_sharp = moe_apply(p_sharp, cfg, x)
+    assert float(aux_sharp) > 1.0 + 1e-3
+    assert float(aux_sharp) > float(aux)
 
 
 def test_moe_full_capacity_token_conservation(key):
