@@ -2,13 +2,13 @@
 ``cohort_round`` engine.
 
 Primary metric (asserted): wall-clock of one full cohort round through
-``FederatedSimulator._run_cohort`` — local training + validation for the
-whole 8-device cohort, i.e. exactly the component the batched engine
-replaces.  Workload: the smoke model config (8 layers, d=64) with
-FedSGD-style single-local-step rounds (1 step x batch 4 x seq 8) over small
-near-uniform shards — the cross-device emulation regime the engine targets:
-per-device compute is small, so the sequential loop's per-device costs (two
-jit dispatches with ~100-leaf pytrees, host-side optimizer init, stacking,
+``CohortEngine.run_cohort`` — local training + validation for the whole
+8-device cohort, i.e. exactly the component the batched engine replaces.
+Workload: the smoke model config (8 layers, d=64) with FedSGD-style
+single-local-step rounds (1 step x batch 4 x seq 8) over small near-uniform
+shards — the cross-device emulation regime the engine targets: per-device
+compute is small, so the sequential loop's per-device costs (two jit
+dispatches with ~100-leaf pytrees, host-side optimizer init, stacking,
 blocking accuracy syncs) dominate, and one fused jit'd call over the
 stacked cohort amortizes all of it.  Gather-mode STLD with a fixed rate
 (DropPEFT-b2 ablation) keeps one static active-count group, so the two
@@ -16,7 +16,7 @@ modes' compiled graphs do identical math and the comparison is pure
 execution strategy.  On heavy per-device workloads this 2-core CPU
 container is element-throughput-bound and the two modes converge —
 accelerators are where the compute side of the batched engine pays off; the
-end-to-end simulator comparison is reported alongside for transparency.
+end-to-end runner comparison is reported alongside for transparency.
 
 Like ``kernel_bench`` the portable signal is CSV rows (stdout); a JSON
 summary line with the measured speedups is emitted as well so downstream
@@ -30,18 +30,18 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import cost_model_cfg, emit, sim_model_cfg, train_cfg
+from repro import api
 from repro.configs import FederatedConfig, PEFTConfig, STLDConfig
 from repro.data import make_task
-from repro.federated.simulator import FederatedSimulator
+from repro.federated.runner import ExperimentRunner
 
 _DEVICES = 8
 
 
-def _make_sim(mode: str, seed: int = 0) -> FederatedSimulator:
+def _make_runner(mode: str, seed: int = 0) -> ExperimentRunner:
     fed = FederatedConfig(
         num_devices=_DEVICES,
         devices_per_round=_DEVICES,
@@ -52,40 +52,51 @@ def _make_sim(mode: str, seed: int = 0) -> FederatedSimulator:
         # batched engine evaluate more rows than the sequential loop does
         dirichlet_alpha=1000.0,
     )
-    return FederatedSimulator(
-        sim_model_cfg(),
-        PEFTConfig(method="lora", lora_rank=4, adapter_dim=8),
-        STLDConfig(mode="gather", mean_rate=0.5),
-        fed,
-        train_cfg(),
-        strategy="droppeft_b2",  # fixed rate: one static gather group
-        cost_cfg=cost_model_cfg(),
+    return api.build(
+        "droppeft_b2",  # fixed rate: one static gather group
+        cfg=sim_model_cfg(),
+        peft_cfg=PEFTConfig(method="lora", lora_rank=4, adapter_dim=8),
+        stld_cfg=STLDConfig(mode="gather", mean_rate=0.5),
+        fed_cfg=fed,
+        train_cfg=train_cfg(),
+        cost_model=cost_model_cfg(),
         seed=seed,
         cohort_mode=mode,
         task=make_task(num_examples=128, vocab_size=512, seq_len=8, seed=seed),
     )
 
 
+def _one_cohort_round(runner: ExperimentRunner, cohort, rates):
+    """One engine dispatch over the full cohort (fixed start trees/key, so
+    repeated calls measure pure execution, not experiment drift)."""
+    state = runner.state
+    start = [state.global_peft] * len(cohort)
+    _, _, outs = runner.ctx.engine.run_cohort(
+        state.key, 0, cohort, rates, start, runner.ctx.num_classes,
+        runner.ctx.cfg.num_layers,
+    )
+    return outs
+
+
 def run(quick: bool = False):
     reps = 3 if quick else 10
     trials = 1 if quick else 3
     e2e_rounds = 4 if quick else 8
-    sims = {mode: _make_sim(mode) for mode in ("sequential", "batched")}
-    num_classes = jnp.arange(sims["batched"].task.num_classes)
+    runners = {mode: _make_runner(mode) for mode in ("sequential", "batched")}
     cohort = list(range(_DEVICES))
     rates = [0.5] * _DEVICES
 
     # ---------------------------------------------- engine: one cohort round
-    engine = {mode: float("inf") for mode in sims}
-    for sim in sims.values():  # compile/warm both paths
-        sim._run_cohort(cohort, rates, num_classes, sim.cfg.num_layers)
+    engine = {mode: float("inf") for mode in runners}
+    for runner in runners.values():  # compile/warm both paths
+        _one_cohort_round(runner, cohort, rates)
     # interleave trials and keep per-mode minima: the shared container's
     # background load is additive noise that min-of-trials filters out
     for _ in range(trials):
-        for mode, sim in sims.items():
+        for mode, runner in runners.items():
             t0 = time.perf_counter()
             for _ in range(reps):
-                outs = sim._run_cohort(cohort, rates, num_classes, sim.cfg.num_layers)
+                outs = _one_cohort_round(runner, cohort, rates)
                 jax.block_until_ready([o[0] for o in outs])
             engine[mode] = min(engine[mode], (time.perf_counter() - t0) / reps)
     for mode in engine:
@@ -97,12 +108,15 @@ def run(quick: bool = False):
     engine_speedup = engine["sequential"] / engine["batched"]
     emit("cohort/engine_speedup", 0.0, f"x{engine_speedup:.2f}")
 
-    # ------------------------------- end-to-end simulator rounds (reported)
+    # ------------------------------- end-to-end runner rounds (reported)
     e2e = {}
     curves = {}
-    for mode, sim in sims.items():
+    # reuse the warmed runners so the timed rounds measure execution, not
+    # compilation; both modes did identical engine-loop work above, so their
+    # device data-sampler streams stay aligned and parity is preserved
+    for mode, runner in runners.items():
         t0 = time.perf_counter()
-        curves[mode] = sim.run(rounds=e2e_rounds)
+        curves[mode] = runner.run(rounds=e2e_rounds)
         e2e[mode] = time.perf_counter() - t0
         emit(f"cohort/e2e_{mode}", e2e[mode] / e2e_rounds * 1e6, f"rounds={e2e_rounds}")
     # the two modes must also be running the SAME experiment (parity)

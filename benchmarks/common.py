@@ -41,24 +41,28 @@ def train_cfg():
     return TrainConfig(learning_rate=5e-3, total_steps=400, warmup_steps=5)
 
 
-def run_sim(strategy, *, rounds=8, peft="lora", stld_mode="cond", fixed_rate=None,
-            distribution="incremental", alpha=1.0, seed=0):
-    from repro.federated.simulator import METHODS, FederatedSimulator, Strategy
+# explicit "not passed" sentinel: fixed_rate=0.0 is a legitimate sweep point
+# (zero dropout) and must not fall back to the bandit or a 0.5 default
+_UNSET = object()
 
-    strat = METHODS[strategy] if isinstance(strategy, str) else strategy
-    if fixed_rate is not None:
-        strat = Strategy(**{**strat.__dict__, "configurator": False, "fixed_rate": fixed_rate})
-    sim = FederatedSimulator(
-        sim_model_cfg(),
-        PEFTConfig(method=peft, lora_rank=4, adapter_dim=8),
-        STLDConfig(mode=stld_mode, mean_rate=fixed_rate or 0.5, distribution=distribution),
-        fed_cfg(rounds=rounds, alpha=alpha),
-        train_cfg(),
-        strategy=strat,
-        cost_cfg=cost_model_cfg(),
+
+def run_sim(strategy, *, rounds=8, peft="lora", stld_mode="cond", fixed_rate=_UNSET,
+            distribution="incremental", alpha=1.0, seed=0):
+    from repro import api
+
+    return api.experiment(
+        strategy,
+        cfg=sim_model_cfg(),
+        peft_cfg=PEFTConfig(method=peft, lora_rank=4, adapter_dim=8),
+        stld_mode=stld_mode,
+        distribution=distribution,
+        fixed_rate=None if fixed_rate is _UNSET else fixed_rate,
+        fed_cfg=fed_cfg(rounds=rounds, alpha=alpha),
+        train_cfg=train_cfg(),
+        cost_model=cost_model_cfg(),
         seed=seed,
+        rounds=rounds,
     )
-    return sim.run(rounds=rounds)
 
 
 def timeit(fn, *args, iters=3, warmup=1):

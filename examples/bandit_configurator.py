@@ -8,17 +8,28 @@ the bandit tracking it.
 """
 import numpy as np
 
-from repro.core.configurator import OnlineConfigurator
+from repro import api
+from repro.configs import FederatedConfig
 
 rng = np.random.default_rng(0)
-cfgor = OnlineConfigurator(
-    rate_grid=(0.1, 0.3, 0.5, 0.7, 0.9),
-    startup=(0.3, 0.5, 0.7),
-    num_candidates=3,
-    explore_rate=0.34,
-    explore_interval=4,
-    window_size=6,
+# the exact configurator a DropPEFT experiment would use: built by the
+# algorithm from the federated config, pulled out of the runner's RoundState
+runner = api.build(
+    "droppeft",
+    model_overrides=dict(num_layers=4, d_model=32, d_ff=64, num_heads=2,
+                         num_kv_heads=2, vocab_size=128, dtype="float32"),
+    lora_rank=2,
+    fed_cfg=FederatedConfig(
+        num_devices=4,
+        devices_per_round=4,
+        rate_grid=(0.1, 0.3, 0.5, 0.7, 0.9),
+        num_candidates=3,
+        explore_rate=0.34,
+        explore_interval=4,
+        window_size=6,
+    ),
 )
+cfgor = runner.state.configurator
 
 
 def sweet_spot(round_idx: int) -> float:

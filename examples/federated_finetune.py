@@ -1,37 +1,35 @@
 """End-to-end federated fine-tuning (the paper's full system).
 
-Runs DropPEFT vs FedLoRA on a non-IID synthetic task and prints the
-time-to-accuracy comparison — a miniature of paper Table 3.
+Runs DropPEFT vs FedLoRA on a non-IID synthetic task through the
+``repro.api`` facade and prints the time-to-accuracy comparison — a
+miniature of paper Table 3.
 
     PYTHONPATH=src python examples/federated_finetune.py
 """
 import numpy as np
 
-from repro.configs import FederatedConfig, PEFTConfig, STLDConfig, TrainConfig, get_config
-from repro.federated.simulator import FederatedSimulator
+from repro import api
+from repro.configs import FederatedConfig, TrainConfig
 
-cfg = get_config("qwen3-1.7b", smoke=True).replace(
-    num_layers=4, d_model=64, d_ff=128, num_heads=4, num_kv_heads=2,
-    vocab_size=512, dtype="float32",
-)
 fed = FederatedConfig(num_devices=10, devices_per_round=4, local_steps=4,
                       batch_size=16, dirichlet_alpha=1.0)
-train = TrainConfig(learning_rate=5e-3, total_steps=400, warmup_steps=5)
 ROUNDS = 10
 
 results = {}
 for method in ("fedlora", "droppeft"):
-    sim = FederatedSimulator(
-        cfg,
-        PEFTConfig(method="lora", lora_rank=4),
-        STLDConfig(mean_rate=0.5),
-        fed,
-        train,
-        strategy=method,
-        cost_cfg=get_config("qwen3-1.7b"),  # time accounting at 1.7B scale
+    res = api.experiment(
+        method,
+        model="qwen3-1.7b",
+        model_overrides=dict(num_layers=4, d_model=64, d_ff=128, num_heads=4,
+                             num_kv_heads=2, vocab_size=512, dtype="float32"),
+        peft="lora",
+        lora_rank=4,
+        fed_cfg=fed,
+        train_cfg=TrainConfig(learning_rate=5e-3, total_steps=400, warmup_steps=5),
+        cost_model="qwen3-1.7b",  # time accounting at 1.7B scale
         seed=0,
+        rounds=ROUNDS,
     )
-    res = sim.run(rounds=ROUNDS)
     results[method] = res
     print(f"\n== {method} ==")
     for r in range(res.rounds):

@@ -8,7 +8,7 @@ training steps — the paper's Eq. 3 layer gating end to end.
 import jax
 import jax.numpy as jnp
 
-from repro.configs import PEFTConfig, TrainConfig, get_config
+from repro.configs import FederatedConfig, PEFTConfig, TrainConfig, get_config
 from repro.core import peft as peft_lib
 from repro.core import stld
 from repro.core.schedules import drop_rates
@@ -47,4 +47,17 @@ for i in range(5):
     peft, opt, metrics = step(base, peft, opt, batch, jax.random.fold_in(key, 100 + i))
     print(f"step {i}: loss={float(metrics['loss']):.3f} grad_norm={float(metrics['grad_norm']):.3f}")
 
+# 4. the full federated system is one facade call away
+from repro import api
+
+res = api.experiment(
+    "droppeft",
+    model_overrides=dict(num_layers=4, d_model=32, d_ff=64, num_heads=2,
+                         num_kv_heads=2, vocab_size=128, dtype="float32"),
+    lora_rank=2,
+    fed_cfg=FederatedConfig(num_devices=4, devices_per_round=2, local_steps=2, batch_size=8),
+    train_cfg=TrainConfig(learning_rate=5e-3, total_steps=100, warmup_steps=2),
+    rounds=2,
+)
+print(f"federated (repro.api): 2 rounds, acc={res.accuracy[-1]:.3f}")
 print("OK — see examples/federated_finetune.py for the full federated system")

@@ -1,0 +1,172 @@
+"""Single entry point for federated fine-tuning experiments.
+
+Every consumer — benchmarks, examples, the launch driver — builds its
+experiment here instead of hand-wiring configs into a simulator::
+
+    from repro import api
+
+    result = api.experiment(method="droppeft", rounds=10, seed=0)
+    print(result.final_accuracy, result.time_to_accuracy(0.6, sustained=True))
+
+``experiment`` is the one-shot path; ``build`` returns the underlying
+:class:`~repro.federated.runner.ExperimentRunner` when the caller needs the
+trained state afterwards (checkpointing, inspection, resuming)::
+
+    runner = api.build(method="droppeft", checkpoint_dir="ckpts")
+    result = runner.run(rounds=20, target_accuracy=0.8)
+    peft = runner.state.global_peft
+
+``method`` accepts a registered name (``api.list_methods()``), a
+:class:`~repro.federated.algorithms.FederatedAlgorithm` instance (e.g. a
+custom plugin subclass), or a legacy ``Strategy``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Union
+
+from repro.configs import (
+    FederatedConfig,
+    PEFTConfig,
+    STLDConfig,
+    TrainConfig,
+    get_config,
+)
+from repro.federated.algorithms import (
+    FederatedAlgorithm,
+    get_algorithm,
+    registered_methods,
+)
+from repro.federated.runner import ExperimentRunner, SimResult, fresh_algorithm
+
+__all__ = ["build", "experiment", "replicate", "list_methods"]
+
+
+def list_methods() -> List[str]:
+    """Names accepted by ``method=`` (the algorithm registry)."""
+    return registered_methods()
+
+
+def _resolve_algorithm(method, fixed_rate: Optional[float]) -> FederatedAlgorithm:
+    if isinstance(method, str):
+        algorithm: FederatedAlgorithm = get_algorithm(method)()
+    elif isinstance(method, FederatedAlgorithm):
+        algorithm = method
+    else:  # legacy Strategy flag table
+        from repro.federated.simulator import algorithm_from_strategy
+
+        algorithm = algorithm_from_strategy(method)
+    if fixed_rate is not None:
+        # an explicit fixed rate overrides the bandit (0.0 is a valid sweep
+        # point: "unset" is spelled None, never falsiness); copy first so a
+        # caller-owned instance is never mutated
+        algorithm = fresh_algorithm(algorithm)
+        algorithm.use_configurator = False
+        algorithm.fixed_rate = float(fixed_rate)
+    return algorithm
+
+
+def build(
+    method: Union[str, FederatedAlgorithm, object] = "droppeft",
+    model: str = "qwen3-1.7b",
+    *,
+    smoke: bool = True,
+    cfg=None,
+    model_overrides: Optional[dict] = None,
+    # PEFT
+    peft: str = "lora",
+    lora_rank: Optional[int] = None,
+    adapter_dim: Optional[int] = None,
+    peft_cfg: Optional[PEFTConfig] = None,
+    # STLD
+    stld_mode: str = "cond",
+    mean_rate: Optional[float] = None,
+    distribution: str = "incremental",
+    stld_cfg: Optional[STLDConfig] = None,
+    # federated round structure
+    fed_cfg: Optional[FederatedConfig] = None,
+    train_cfg: Optional[TrainConfig] = None,
+    # method policy
+    fixed_rate: Optional[float] = None,
+    # system-model cost scale: None -> the training cfg; an arch name or a
+    # ModelConfig -> cost accounting at that (e.g. full 1.7B) scale
+    cost_model=None,
+    task=None,
+    seed: int = 0,
+    cohort_mode: str = "auto",
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 1,
+    resume: bool = False,
+) -> ExperimentRunner:
+    """Construct a fully-wired :class:`ExperimentRunner` (does not run it)."""
+    if cfg is None:
+        cfg = get_config(model, smoke=smoke)
+    if model_overrides:
+        cfg = cfg.replace(**model_overrides)
+    if peft_cfg is None:
+        kw = {"method": peft}
+        if lora_rank is not None:
+            kw["lora_rank"] = lora_rank
+        if adapter_dim is not None:
+            kw["adapter_dim"] = adapter_dim
+        peft_cfg = PEFTConfig(**kw)
+    if stld_cfg is None:
+        if mean_rate is None:
+            mean_rate = 0.5 if fixed_rate is None else fixed_rate
+        stld_cfg = STLDConfig(
+            mode=stld_mode, mean_rate=mean_rate, distribution=distribution
+        )
+    if fed_cfg is None:
+        fed_cfg = FederatedConfig()
+    if train_cfg is None:
+        train_cfg = TrainConfig()
+    if isinstance(cost_model, str):
+        cost_model = get_config(cost_model)
+    return ExperimentRunner(
+        cfg,
+        peft_cfg,
+        stld_cfg,
+        fed_cfg,
+        train_cfg,
+        algorithm=_resolve_algorithm(method, fixed_rate),
+        task=task,
+        cost_cfg=cost_model,
+        seed=seed,
+        cohort_mode=cohort_mode,
+        checkpoint_dir=checkpoint_dir,
+        checkpoint_every=checkpoint_every,
+        resume=resume,
+    )
+
+
+def experiment(
+    method: Union[str, FederatedAlgorithm, object] = "droppeft",
+    model: str = "qwen3-1.7b",
+    *,
+    rounds: Optional[int] = None,
+    target_accuracy: Optional[float] = None,
+    **kwargs,
+) -> SimResult:
+    """Build and run one federated experiment; returns its SimResult."""
+    runner = build(method, model, **kwargs)
+    return runner.run(rounds=rounds, target_accuracy=target_accuracy)
+
+
+def replicate(
+    method: Union[str, FederatedAlgorithm] = "droppeft",
+    model: str = "qwen3-1.7b",
+    *,
+    seeds: Sequence[int] = (0, 1, 2),
+    rounds: Optional[int] = None,
+    target_accuracy: Optional[float] = None,
+    **kwargs,
+) -> List[SimResult]:
+    """Multi-seed replication: one independent experiment per seed."""
+    results = []
+    for seed in seeds:
+        kw = dict(kwargs)
+        kw["seed"] = seed
+        # each seed gets a fresh, configuration-preserving algorithm copy so
+        # replicates are independent and the caller's instance stays unbound
+        runner = build(fresh_algorithm(method), model, **kw)
+        results.append(runner.run(rounds=rounds, target_accuracy=target_accuracy))
+    return results

@@ -1,3 +1,17 @@
-from repro.checkpoint.ckpt import load_pytree, restore_latest, save_pytree
+from repro.checkpoint.ckpt import (
+    latest_state_dir,
+    load_pytree,
+    load_state,
+    restore_latest,
+    save_pytree,
+    save_state,
+)
 
-__all__ = ["save_pytree", "load_pytree", "restore_latest"]
+__all__ = [
+    "save_pytree",
+    "load_pytree",
+    "restore_latest",
+    "save_state",
+    "load_state",
+    "latest_state_dir",
+]

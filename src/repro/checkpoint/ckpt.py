@@ -82,3 +82,85 @@ def restore_latest(template: Any, directory: str) -> Optional[tuple]:
     step = max(steps)
     tree = load_pytree(template, os.path.join(directory, f"step_{step:08d}"))
     return tree, step
+
+
+# --------------------------------------------------------------------------
+# Templateless state checkpoints (experiment save/resume).
+#
+# ``save_pytree``/``load_pytree`` need a live template to rebuild structure,
+# which a resuming process does not have for run state whose shape depends on
+# history (e.g. which federated devices have participated).  ``save_state``
+# therefore records an explicit JSON skeleton of the container structure
+# (dict/list/tuple) alongside the leaf arrays, plus an arbitrary JSON
+# ``meta`` payload for host-side state (RNG states, counters, histories).
+
+
+def _skeletonize(node: Any, leaves: list):
+    if isinstance(node, dict):
+        keys = list(node.keys())
+        return {"t": "dict", "k": keys, "v": [_skeletonize(node[k], leaves) for k in keys]}
+    if isinstance(node, (list, tuple)):
+        return {
+            "t": "list" if isinstance(node, list) else "tuple",
+            "v": [_skeletonize(x, leaves) for x in node],
+        }
+    arr = np.asarray(node)
+    dtype_name = str(arr.dtype)
+    if dtype_name == "bfloat16":  # numpy npz cannot hold bf16: store bits
+        arr = arr.view(np.uint16)
+    leaves.append(arr)
+    return {"t": "leaf", "i": len(leaves) - 1, "dtype": dtype_name}
+
+
+def _unskeletonize(skel: dict, data) -> Any:
+    kind = skel["t"]
+    if kind == "dict":
+        return {
+            k: _unskeletonize(v, data) for k, v in zip(skel["k"], skel["v"])
+        }
+    if kind in ("list", "tuple"):
+        items = [_unskeletonize(v, data) for v in skel["v"]]
+        return items if kind == "list" else tuple(items)
+    arr = data[f"leaf_{skel['i']}"]
+    if skel["dtype"] == "bfloat16":
+        import ml_dtypes
+
+        arr = arr.view(ml_dtypes.bfloat16)
+    return arr
+
+
+def save_state(directory: str, step: int, tree: Any, meta: Any = None) -> str:
+    """Save a nested dict/list/tuple of arrays + a JSON ``meta`` payload."""
+    out_dir = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(out_dir, exist_ok=True)
+    leaves: list = []
+    skeleton = _skeletonize(tree, leaves)
+    np.savez(
+        os.path.join(out_dir, "arrays.npz"),
+        **{f"leaf_{i}": arr for i, arr in enumerate(leaves)},
+    )
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"step": step, "skeleton": skeleton, "meta": meta}, f, indent=2)
+    return out_dir
+
+
+def load_state(checkpoint_dir: str) -> tuple:
+    """(tree, meta) saved by :func:`save_state`."""
+    with open(os.path.join(checkpoint_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(checkpoint_dir, "arrays.npz"))
+    return _unskeletonize(manifest["skeleton"], data), manifest.get("meta")
+
+
+def latest_state_dir(directory: str) -> Optional[str]:
+    """Path of the newest ``step_*`` checkpoint under ``directory``, or None."""
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m:
+            steps.append(int(m.group(1)))
+    if not steps:
+        return None
+    return os.path.join(directory, f"step_{max(steps):08d}")

@@ -134,6 +134,44 @@ class OnlineConfigurator:
             return 0.5
         return max(self.arms.values(), key=lambda a: a.reward).rate
 
+    # ------------------------------------------------------- serialization
+    def state_dict(self) -> dict:
+        """JSON-serializable snapshot; restoring it resumes the bandit's
+        explore/exploit schedule and python RNG stream bit-exactly."""
+        return {
+            "arms": [
+                {"rate": a.rate, "rewards": list(a.rewards), "last_eval": a.last_eval}
+                for a in self.arms.values()
+            ],
+            "list_c": list(self.list_c),
+            "history": list(self.history),
+            "is_explore": self.is_explore,
+            "exploit_rounds_left": self._exploit_rounds_left,
+            "round": self._round,
+            "pending": list(getattr(self, "_pending", [])),
+            "has_pending": hasattr(self, "_pending"),
+            "rng_state": list(self._rng.getstate()),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.arms = {
+            a["rate"]: ArmStats(
+                rate=a["rate"], rewards=list(a["rewards"]), last_eval=a["last_eval"]
+            )
+            for a in state["arms"]
+        }
+        self.list_c = list(state["list_c"])
+        self.history = list(state["history"])
+        self.is_explore = state["is_explore"]
+        self._exploit_rounds_left = state["exploit_rounds_left"]
+        self._round = state["round"]
+        if state.get("has_pending", True):
+            self._pending = list(state["pending"])
+        elif hasattr(self, "_pending"):
+            del self._pending  # snapshot predates the first next_round
+        rng_state = state["rng_state"]
+        self._rng.setstate((rng_state[0], tuple(rng_state[1]), rng_state[2]))
+
     # ------------------------------------------------------------- internals
     def _snap_rate(self, r: float) -> float:
         """Map a (possibly float32-degraded) rate back to its exact arm key."""

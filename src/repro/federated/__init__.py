@@ -1,10 +1,31 @@
+from repro.federated.algorithms import (
+    FederatedAlgorithm,
+    get_algorithm,
+    register,
+    registered_methods,
+)
+from repro.federated.engine import CohortEngine
+from repro.federated.runner import ExperimentRunner, SimResult, run_replicates
+from repro.federated.simulator import METHODS, FederatedSimulator, Strategy
+from repro.federated.state import CohortResults, RoundPlan, RoundState
 from repro.federated.system_model import DEVICE_PROFILES, RoundCost, SystemModel
-from repro.federated.simulator import FederatedSimulator, SimResult
 
 __all__ = [
     "DEVICE_PROFILES",
     "RoundCost",
     "SystemModel",
-    "FederatedSimulator",
+    "FederatedAlgorithm",
+    "register",
+    "get_algorithm",
+    "registered_methods",
+    "CohortEngine",
+    "ExperimentRunner",
+    "run_replicates",
     "SimResult",
+    "RoundState",
+    "RoundPlan",
+    "CohortResults",
+    "FederatedSimulator",
+    "Strategy",
+    "METHODS",
 ]

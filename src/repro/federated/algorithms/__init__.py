@@ -1,0 +1,38 @@
+"""Registered federated algorithms (one subclass per paper method).
+
+Importing this package populates the registry.  Registration order matches
+the paper's method table so ``repro.api.list_methods()`` stays stable.
+"""
+from repro.federated.algorithms.base import (
+    FederatedAlgorithm,
+    get_algorithm,
+    register,
+    registered_methods,
+)
+from repro.federated.algorithms.baselines import (
+    FedAdapter,
+    FedAdaOPT,
+    FedHetLoRA,
+    FedLoRA,
+)
+from repro.federated.algorithms.droppeft import (
+    DropPEFT,
+    DropPEFTFixedRate,
+    DropPEFTNoPTLS,
+    DropPEFTNoSTLD,
+)
+
+__all__ = [
+    "FederatedAlgorithm",
+    "register",
+    "get_algorithm",
+    "registered_methods",
+    "FedLoRA",
+    "FedAdapter",
+    "FedHetLoRA",
+    "FedAdaOPT",
+    "DropPEFT",
+    "DropPEFTNoSTLD",
+    "DropPEFTFixedRate",
+    "DropPEFTNoPTLS",
+]

@@ -1,0 +1,82 @@
+"""Federated-PEFT baselines from the paper's evaluation (§6).
+
+    FedLoRA / FedAdapter — vanilla federated PEFT (FedAvg, full depth)
+    FedHetLoRA           — rank-heterogeneous LoRA matched to device tiers
+    FedAdaOPT            — progressive-depth adapter training
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.core import peft as peft_lib
+from repro.federated import server as server_lib
+from repro.federated.algorithms.base import FederatedAlgorithm, register
+from repro.federated.state import CohortResults, RoundState
+
+
+@register("fedlora")
+class FedLoRA(FederatedAlgorithm):
+    """Vanilla federated LoRA: FedAvg over homogeneous client trees."""
+
+
+@register("fedadapter")
+class FedAdapter(FederatedAlgorithm):
+    """Vanilla federated adapters (same loop; the PEFT kind comes from
+    ``peft_cfg.method``)."""
+
+
+@register("fedhetlora")
+class FedHetLoRA(FederatedAlgorithm):
+    """Rank-heterogeneous LoRA: each device trains at the rank its hardware
+    tier affords; the server zero-pads to the max rank and aggregates with
+    sparsity weighting.  Differently-shaped client trees cannot share one
+    vmap axis, so the cohort runs sequentially."""
+
+    requires_sequential = True
+    hetlora_ranks = (4, 8, 16)
+
+    def __init__(self, *, ranks: Optional[Sequence[int]] = None):
+        super().__init__()
+        if ranks is not None:
+            self.hetlora_ranks = tuple(ranks)
+
+    def bind(self, ctx):
+        super().bind(ctx)
+        # per-device LoRA rank from device capability tier
+        tiers = {"tx2": 0, "nx": 1, "agx": 2}
+        self.device_rank = [
+            self.hetlora_ranks[tiers[p]] for p in ctx.device_profile
+        ]
+        self.max_rank = max(self.hetlora_ranks)
+        # global tree holds the max rank
+        pc = ctx.peft_cfg.__class__(
+            **{**ctx.peft_cfg.__dict__, "lora_rank": self.max_rank}
+        )
+        return peft_lib.init_peft(ctx.peft_key, ctx.cfg, pc)
+
+    def client_init(self, state: RoundState, dev: int):
+        return server_lib.truncate_lora_rank(state.global_peft, self.device_rank[dev])
+
+    def merge(self, state: RoundState, results: CohortResults):
+        client_ranks = [self.device_rank[dev] for dev in results.plan.cohort]
+        return server_lib.hetlora_aggregate(results.pefts, client_ranks, self.max_rank)
+
+
+@register("fedadaopt")
+class FedAdaOPT(FederatedAlgorithm):
+    """Progressive-depth adapters: start shallow, grow the trainable depth
+    by two layers every ``adaopt_grow_every`` rounds; updates beyond the
+    active depth are discarded before evaluation."""
+
+    adaopt_grow_every = 5
+
+    def __init__(self, *, grow_every: Optional[int] = None):
+        super().__init__()
+        if grow_every is not None:
+            self.adaopt_grow_every = grow_every
+
+    def active_depth(self, state: RoundState) -> int:
+        return min(
+            self.ctx.cfg.num_layers,
+            2 + (state.round_index // self.adaopt_grow_every) * 2,
+        )

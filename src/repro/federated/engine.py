@@ -1,0 +1,331 @@
+"""Cohort execution engine: how one round's selected devices are trained.
+
+The engine is algorithm-agnostic — it owns the jit'd client programs, the
+per-device datasets, and the batched/sequential dispatch strategy, while the
+*what* of a round (cohort choice, dropout rates, aggregation rule) lives in
+:mod:`repro.federated.algorithms`.
+
+``cohort_mode`` selects the dispatch strategy:
+
+* ``"batched"`` — per-device batches, dropout rates, PRNG keys and
+  LR-schedule offsets are stacked along a leading device axis and one jit'd
+  ``cohort_round`` (``jax.vmap`` of the local round) trains the whole
+  cohort; validation runs through the vmapped ``cohort_evaluate`` on padded
+  val batches.  In gather-mode STLD the static active-layer count can
+  differ per device, so the cohort is partitioned into same-count groups
+  and each group runs as one batched call.
+* ``"sequential"`` — the per-device python loop, one jit'd ``local_round``
+  dispatch per device.  Required for FedHetLoRA's rank-heterogeneous PEFT
+  trees, which cannot share one stacked vmap axis.
+
+Both modes consume identical PRNG streams (one ``jax.random.split`` fan-out
+per round, per-device global-step offsets in cohort order) and produce
+numerically matching per-device PEFT trees, metrics, and PTLS importances —
+see ``tests/test_cohort_parity.py``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stld as stld_lib
+from repro.federated import server as server_lib
+from repro.federated.client import make_client_fns
+from repro.models.registry import default_stack_mode
+from repro.optim import adamw_init
+
+
+class CohortEngine:
+    """Executes cohorts of local rounds; owns jit caches and device data."""
+
+    def __init__(
+        self,
+        cfg,
+        peft_cfg,
+        stld_cfg,
+        fed_cfg,
+        train_cfg,
+        task,
+        devices,
+        base_params,
+        *,
+        cohort_mode: str,
+        stld_enabled: bool,
+    ):
+        self.cfg = cfg
+        self.base_params = base_params
+        self.peft_cfg = peft_cfg
+        self.stld_cfg = stld_cfg
+        self.fed_cfg = fed_cfg
+        self.train_cfg = train_cfg
+        self.task = task
+        self.devices = devices
+        self.cohort_mode = cohort_mode
+        self.stld_enabled = stld_enabled
+
+        self.stack_mode = default_stack_mode(cfg)
+        self.client = make_client_fns(
+            cfg, peft_cfg, stld_cfg, train_cfg, stack_mode=self.stack_mode
+        )
+        self.local_round, self.evaluate = self.client.local_round, self.client.evaluate
+        # server aggregation is pure tree math: jit it so a round's
+        # aggregation is one dispatch instead of hundreds of tiny ops
+        self.fedavg = jax.jit(server_lib.fedavg)
+        self.ptls_aggregate = jax.jit(server_lib.ptls_aggregate)
+        # fixed val pad size so the jit'd cohort_evaluate signature is stable
+        self._val_pad = max(len(d.val_batch()["labels"]) for d in devices)
+        self._val_cache: Dict[int, dict] = {}
+        self._stack_cache: Dict[int, object] = {}
+        self._unstack_cache: Dict[int, object] = {}
+        # FedHetLoRA: per-device LoRA rank + per-rank client programs
+        self.device_rank: Optional[List[int]] = None
+        self._het_fns: Dict[int, object] = {}
+
+    def enable_hetlora(self, device_rank: List[int]):
+        """Build per-rank client programs for rank-heterogeneous cohorts."""
+        self.device_rank = list(device_rank)
+        for r in set(self.device_rank):
+            pc = self.peft_cfg.__class__(
+                **{**self.peft_cfg.__dict__, "lora_rank": r}
+            )
+            self._het_fns[r] = make_client_fns(
+                self.cfg, pc, self.stld_cfg, self.train_cfg, stack_mode=self.stack_mode
+            )
+
+    # ------------------------------------------------------------- execution
+    def run_cohort(self, key, global_step, cohort, rates, start_pefts, num_classes, adaopt_depth):
+        """Train one round's cohort; returns ``(new_key, new_global_step,
+        outs)`` where ``outs`` is a list (len N) of per-device
+        ``(peft, metrics, importance, accuracy)`` tuples.  Both modes draw
+        from identical PRNG streams: one split fan-out for the per-device
+        keys, per-device global-step offsets in cohort order."""
+        fed = self.fed_cfg
+        n = len(cohort)
+        key, *keys = jax.random.split(key, n + 1)
+        gsteps = [global_step + i * fed.local_steps for i in range(n)]
+        new_gstep = global_step + n * fed.local_steps
+
+        if self.cohort_mode == "batched":
+            outs = self._run_cohort_batched(
+                cohort, rates, start_pefts, keys, gsteps, num_classes, adaopt_depth
+            )
+        else:
+            outs = [
+                self._run_device(
+                    cohort[i], rates[i], start_pefts[i], keys[i], gsteps[i],
+                    num_classes, adaopt_depth,
+                )
+                for i in range(n)
+            ]
+        return key, new_gstep, outs
+
+    def _adaopt_truncate(self, peft_i, start_peft, adaopt_depth: int):
+        """Progressive depth (FedAdaOPT): layers beyond the active depth keep
+        their incoming values — their adapter updates are discarded BEFORE
+        evaluation, so reported accuracy measures the retained model."""
+        return [
+            peft_i[l] if l < adaopt_depth else start_peft[l]
+            for l in range(self.cfg.num_layers)
+        ]
+
+    def _stacked_train_batches(self, dev: int):
+        fed = self.fed_cfg
+        batches = list(self.devices[dev].train_batches(fed.batch_size, fed.local_steps))
+        return {
+            k: np.stack([b[k] for b in batches]) for k in ("tokens", "targets", "mask")
+        }
+
+    def _padded_val_batch(self, dev: int):
+        """Val batch padded to the cohort-wide size with a validity mask.
+        Val splits are static, so the padded batch is built once per device."""
+        cached = self._val_cache.get(dev)
+        if cached is None:
+            val = self.devices[dev].val_batch()
+            b = len(val["labels"])
+            pad = self._val_pad - b
+            valid = np.zeros((self._val_pad,), dtype=np.float32)
+            valid[:b] = 1.0
+            cached = {
+                "tokens": np.pad(val["tokens"], ((0, pad), (0, 0))),
+                "labels": np.pad(val["labels"], (0, pad)),
+                "valid": valid,
+            }
+            self._val_cache[dev] = cached
+        return cached
+
+    def _static_active_counts(self, rates) -> List[Optional[int]]:
+        """Gather-mode static active-layer count per device (None in cond
+        mode).  Static counts partition the batched cohort into groups."""
+        if self.stld_cfg.mode == "gather" and self.stld_enabled:
+            return [
+                stld_lib.static_active_count(
+                    rate,
+                    self.cfg.num_layers,
+                    self.stld_cfg.gather_bucket,
+                    self.stld_cfg.min_active_layers,
+                )
+                for rate in rates
+            ]
+        return [None] * len(rates)
+
+    def _run_cohort_batched(
+        self, cohort, rates, start_pefts, keys, gsteps, num_classes, adaopt_depth
+    ):
+        """One (or few, in gather mode) jit'd calls train the whole cohort."""
+        n = len(cohort)
+        adaopt = adaopt_depth < self.cfg.num_layers
+        batch_list = [self._stacked_train_batches(dev) for dev in cohort]
+        val_list = [self._padded_val_batch(dev) for dev in cohort]
+        num_active = self._static_active_counts(rates)
+
+        outs: List[Optional[tuple]] = [None] * n
+        for na in dict.fromkeys(num_active):
+            pos = [i for i in range(n) if num_active[i] == na]
+            peft_stack = self._stack_trees([start_pefts[i] for i in pos])
+            batch_stack = {
+                k: jnp.asarray(np.stack([batch_list[i][k] for i in pos]))
+                for k in ("tokens", "targets", "mask")
+            }
+            rate_arr = jnp.asarray([float(rates[i]) for i in pos], dtype=jnp.float32)
+            key_arr = jnp.stack([keys[i] for i in pos])
+            gstep_arr = jnp.asarray([gsteps[i] for i in pos], dtype=jnp.int32)
+            val_args = (
+                jnp.asarray(np.stack([val_list[i]["tokens"] for i in pos])),
+                jnp.asarray(np.stack([val_list[i]["labels"] for i in pos])),
+                jnp.asarray(np.stack([val_list[i]["valid"] for i in pos])),
+            )
+            if adaopt:
+                # progressive depth discards deep-layer updates before eval,
+                # so train and eval cannot be fused: train, truncate the
+                # stacked tree per layer, then evaluate the retained model
+                peft_out, metrics, importances = self.client.cohort_round(
+                    self.base_params, peft_stack, batch_stack,
+                    rate_arr, key_arr, gstep_arr, num_active=na,
+                )
+                peft_out = self._adaopt_truncate(peft_out, peft_stack, adaopt_depth)
+                accs = self.client.cohort_evaluate(
+                    self.base_params, peft_out, *val_args, num_classes
+                )
+            else:
+                peft_out, metrics, importances, accs = self.client.cohort_round_eval(
+                    self.base_params,
+                    peft_stack,
+                    batch_stack,
+                    rate_arr,
+                    key_arr,
+                    gstep_arr,
+                    *val_args,
+                    num_classes,
+                    num_active=na,
+                )
+            # one jit'd unstack + one host pull: per-leaf x[j] slicing and
+            # per-device float() syncs would cost hundreds of tiny dispatches
+            peft_list = self._unstack_tree(peft_out, len(pos))
+            metrics_np, imps_np, accs_np = jax.device_get((metrics, importances, accs))
+            for j, i in enumerate(pos):
+                dev_metrics = {k: v[j] for k, v in metrics_np.items()}
+                outs[i] = (peft_list[j], dev_metrics, imps_np[j], float(accs_np[j]))
+        return outs
+
+    def _stack_trees(self, trees):
+        """Stack a list of identically-shaped pytrees along a new leading
+        axis in ONE jit'd dispatch (cached per cohort-group size)."""
+        n = len(trees)
+        fn = self._stack_cache.get(n)
+        if fn is None:
+            fn = jax.jit(lambda *ts: jax.tree.map(lambda *xs: jnp.stack(xs), *ts))
+            self._stack_cache[n] = fn
+        return fn(*trees)
+
+    def _unstack_tree(self, tree, n: int):
+        """Split a leading-(n,) stacked pytree into n pytrees in ONE jit'd
+        dispatch (cached per cohort-group size)."""
+        fn = self._unstack_cache.get(n)
+        if fn is None:
+            fn = jax.jit(lambda t: tuple(jax.tree.map(lambda x: x[j], t) for j in range(n)))
+            self._unstack_cache[n] = fn
+        return fn(tree)
+
+    def _run_device(
+        self, dev: int, rate: float, start_peft, key, gstep: int, num_classes, adaopt_depth
+    ):
+        if self.device_rank is not None:
+            fns = self._het_fns[self.device_rank[dev]]
+            local_round, evaluate = fns.local_round, fns.evaluate
+        else:
+            local_round, evaluate = self.local_round, self.evaluate
+
+        stacked = {
+            k: jnp.asarray(v) for k, v in self._stacked_train_batches(dev).items()
+        }
+        opt_state = adamw_init(start_peft)
+        num_active = self._static_active_counts([rate])[0]
+        peft_i, _, metrics, importance = local_round(
+            self.base_params,
+            start_peft,
+            opt_state,
+            stacked,
+            jnp.asarray(rate, dtype=jnp.float32),
+            key,
+            jnp.asarray(gstep, dtype=jnp.int32),
+            num_active=num_active,
+        )
+        if adaopt_depth < self.cfg.num_layers:
+            peft_i = self._adaopt_truncate(peft_i, start_peft, adaopt_depth)
+
+        val = self.devices[dev].val_batch()
+        acc = float(
+            evaluate(
+                self.base_params,
+                peft_i,
+                jnp.asarray(val["tokens"]),
+                jnp.asarray(val["labels"]),
+                num_classes,
+            )
+        )
+        return peft_i, metrics, importance, acc
+
+    # ------------------------------------------------------------ evaluation
+    def final_accuracy(self, global_peft, device_peft, num_classes) -> float:
+        """Paper protocol: mean accuracy across ALL devices' local test sets,
+        each device using its personalized model (global for non-participants)."""
+        hetlora = self.device_rank is not None
+        if self.cohort_mode == "batched" and not hetlora:
+            devs = range(self.fed_cfg.num_devices)
+            peft_stack = self._stack_trees(
+                [device_peft.get(dev, global_peft) for dev in devs]
+            )
+            vals = [self._padded_val_batch(dev) for dev in devs]
+            accs = self.client.cohort_evaluate(
+                self.base_params,
+                peft_stack,
+                jnp.asarray(np.stack([v["tokens"] for v in vals])),
+                jnp.asarray(np.stack([v["labels"] for v in vals])),
+                jnp.asarray(np.stack([v["valid"] for v in vals])),
+                num_classes,
+            )
+            return float(np.mean(np.asarray(accs)))
+        accs = []
+        for dev in range(self.fed_cfg.num_devices):
+            peft_d = device_peft.get(dev, global_peft)
+            if hetlora and dev not in device_peft:
+                peft_d = server_lib.truncate_lora_rank(global_peft, self.device_rank[dev])
+            evaluate = (
+                self._het_fns[self.device_rank[dev]].evaluate if hetlora else self.evaluate
+            )
+            val = self.devices[dev].val_batch()
+            accs.append(
+                float(
+                    evaluate(
+                        self.base_params,
+                        peft_d,
+                        jnp.asarray(val["tokens"]),
+                        jnp.asarray(val["labels"]),
+                        num_classes,
+                    )
+                )
+            )
+        return float(np.mean(accs))

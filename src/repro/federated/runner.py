@@ -1,0 +1,337 @@
+"""Engine-agnostic experiment runner: the federated round loop.
+
+:class:`ExperimentRunner` owns the loop that used to live inside the
+``FederatedSimulator`` god-class.  It builds an :class:`ExperimentContext`
+(task, device shards, hardware profiles, system model, execution engine),
+binds a :class:`~repro.federated.algorithms.FederatedAlgorithm`, and drives
+its lifecycle hooks round by round, threading an immutable
+:class:`~repro.federated.state.RoundState` through them.
+
+On top of the plain loop it provides what the god-class could not:
+
+* ``target_accuracy`` early stop (unchanged semantics),
+* save/resume — any round boundary can be checkpointed through
+  :mod:`repro.checkpoint` and resumed bit-exactly (PRNG streams, bandit
+  arms, per-device data-sampler states and metric history included),
+* multi-seed replication via :func:`run_replicates`.
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, replace
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.core import peft as peft_lib
+from repro.data import DeviceDataset, dirichlet_partition, make_task
+from repro.federated.algorithms import FederatedAlgorithm, get_algorithm
+from repro.federated.engine import CohortEngine
+from repro.federated.state import RoundState
+from repro.federated.system_model import SystemModel, sample_device
+from repro.models.registry import init_params
+
+
+@dataclass
+class SimResult:
+    rounds: int
+    cum_time_s: np.ndarray           # (R,)
+    accuracy: np.ndarray             # (R,) mean cohort val accuracy
+    loss: np.ndarray                 # (R,)
+    rates: np.ndarray                # (R,) mean dropout rate used
+    active_fraction: np.ndarray      # (R,) measured E[L~]/L
+    traffic_mb: np.ndarray           # (R,) cohort total
+    energy_j: np.ndarray             # (R,) cohort total
+    memory_gb: np.ndarray            # (R,) max per-device footprint
+    final_accuracy: float = 0.0
+
+    def time_to_accuracy(self, target: float, *, sustained: bool = False) -> Optional[float]:
+        """Simulated time until ``accuracy >= target``.
+
+        ``sustained=True`` requires the target to be held for every later
+        round too (suffix minimum), so a single noisy round that dips back
+        below the target cannot win a speedup claim.
+        """
+        if sustained:
+            suffix_min = np.minimum.accumulate(self.accuracy[::-1])[::-1]
+            hit = np.where(suffix_min >= target)[0]
+        else:
+            hit = np.where(self.accuracy >= target)[0]
+        return float(self.cum_time_s[hit[0]]) if len(hit) else None
+
+
+@dataclass
+class ExperimentContext:
+    """Everything an algorithm's hooks may consult; built once per seed."""
+
+    cfg: Any
+    peft_cfg: Any
+    stld_cfg: Any
+    fed_cfg: Any
+    train_cfg: Any
+    task: Any
+    devices: List[DeviceDataset]
+    device_profile: List[str]
+    system: SystemModel
+    seed: int
+    peft_key: Any                  # the key init_peft consumed (hetlora re-init)
+    init_global_peft: Any
+    num_classes: Any               # jnp.arange(task.num_classes)
+    engine: Optional[CohortEngine] = None
+
+
+def _build_context(
+    cfg, peft_cfg, stld_cfg, fed_cfg, train_cfg, *, task=None, cost_cfg=None, seed=0
+):
+    """Replicates the legacy simulator's construction order exactly so the
+    numpy/JAX RNG streams (device profiles, param init) are unchanged."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    task = task or make_task(vocab_size=cfg.vocab_size, seed=seed)
+    parts = dirichlet_partition(
+        task.labels, fed_cfg.num_devices, fed_cfg.dirichlet_alpha, seed=seed
+    )
+    devices = [DeviceDataset(task, idx, seed=seed + i) for i, idx in enumerate(parts)]
+    device_profile = [sample_device(rng) for _ in range(fed_cfg.num_devices)]
+    key, k1, k2 = jax.random.split(key, 3)
+    base_params = init_params(k1, cfg)
+    global_peft = peft_lib.init_peft(k2, cfg, peft_cfg)
+    ctx = ExperimentContext(
+        cfg=cfg,
+        peft_cfg=peft_cfg,
+        stld_cfg=stld_cfg,
+        fed_cfg=fed_cfg,
+        train_cfg=train_cfg,
+        task=task,
+        devices=devices,
+        device_profile=device_profile,
+        system=SystemModel(cost_cfg or cfg, peft_cfg),
+        seed=seed,
+        peft_key=k2,
+        init_global_peft=global_peft,
+        num_classes=jnp.arange(task.num_classes),
+    )
+    return ctx, rng, key, base_params
+
+
+def fresh_algorithm(algorithm):
+    """Per-run copy of an algorithm prototype, configuration preserved.
+
+    Algorithm instances are bound to one experiment context; reusing one
+    across runners would rebind it and mutate the caller's object.  A
+    shallow copy keeps every constructor-configured attribute (ranks,
+    fixed rates, toggles) while ``bind`` recomputes all derived state.
+    """
+    if isinstance(algorithm, str):
+        return algorithm
+    algo = copy.copy(algorithm)
+    algo.ctx = None
+    return algo
+
+
+class ExperimentRunner:
+    """Round loop + state threading + checkpointing for one experiment."""
+
+    def __init__(
+        self,
+        cfg,
+        peft_cfg,
+        stld_cfg,
+        fed_cfg,
+        train_cfg,
+        *,
+        algorithm: "FederatedAlgorithm | str" = "droppeft",
+        task=None,
+        cost_cfg=None,
+        seed: int = 0,
+        cohort_mode: str = "auto",
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 1,
+        resume: bool = False,
+    ):
+        if isinstance(algorithm, str):
+            algorithm = get_algorithm(algorithm)()
+        else:
+            # never bind a caller-owned instance: a second runner built from
+            # the same prototype would silently rebind its context
+            algorithm = fresh_algorithm(algorithm)
+        self.algorithm = algorithm
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = max(1, checkpoint_every)
+
+        ctx, rng, key, base_params = _build_context(
+            cfg, peft_cfg, stld_cfg, fed_cfg, train_cfg,
+            task=task, cost_cfg=cost_cfg, seed=seed,
+        )
+        self.ctx = ctx
+        global_peft = algorithm.bind(ctx)
+
+        if cohort_mode not in ("auto", "batched", "sequential"):
+            raise ValueError(f"unknown cohort_mode {cohort_mode!r}")
+        if cohort_mode == "batched" and algorithm.requires_sequential:
+            raise ValueError(
+                f"cohort_mode='batched' cannot stack {algorithm.name}'s "
+                "heterogeneous PEFT trees; use 'sequential' (or 'auto')"
+            )
+        if cohort_mode == "auto":
+            cohort_mode = "sequential" if algorithm.requires_sequential else "batched"
+        self.cohort_mode = cohort_mode
+
+        ctx.engine = CohortEngine(
+            cfg, peft_cfg, stld_cfg, fed_cfg, train_cfg, ctx.task, ctx.devices,
+            base_params, cohort_mode=cohort_mode, stld_enabled=algorithm.stld,
+        )
+        if getattr(algorithm, "device_rank", None) is not None:
+            ctx.engine.enable_hetlora(algorithm.device_rank)
+
+        self.state = RoundState(
+            key=key,
+            global_peft=global_peft,
+            rng=rng,
+            configurator=algorithm.build_configurator(ctx),
+        )
+        if resume:
+            if not checkpoint_dir:
+                raise ValueError("resume=True requires checkpoint_dir")
+            self._restore_latest()
+
+    # ---------------------------------------------------------------- loop
+    def run(
+        self, rounds: Optional[int] = None, target_accuracy: Optional[float] = None
+    ) -> SimResult:
+        algo = self.algorithm
+        total = rounds or self.ctx.fed_cfg.rounds
+        state = self.state
+        while state.round_index < total:
+            plan = algo.configure_round(state)
+            plan.start_pefts = [algo.client_init(state, dev) for dev in plan.cohort]
+            state, results = algo.cohort_step(state, plan)
+            state = algo.aggregate(state, results)
+            state, row = algo.report(state, results)
+            state = replace(
+                state,
+                round_index=state.round_index + 1,
+                history=state.history + (row,),
+            )
+            self.state = state
+            hit_target = target_accuracy is not None and row["acc"] >= target_accuracy
+            if self.checkpoint_dir and (
+                state.round_index % self.checkpoint_every == 0
+                or state.round_index == total
+                or hit_target
+            ):
+                self.save_checkpoint()
+            if hit_target:
+                break
+        return self.result()
+
+    def result(self) -> SimResult:
+        hist = self.state.history
+        res = SimResult(
+            rounds=len(hist),
+            cum_time_s=np.asarray([r["time"] for r in hist]),
+            accuracy=np.asarray([r["acc"] for r in hist]),
+            loss=np.asarray([r["loss"] for r in hist]),
+            rates=np.asarray([r["rate"] for r in hist]),
+            active_fraction=np.asarray([r["active"] for r in hist]),
+            traffic_mb=np.asarray([r["traffic"] for r in hist]),
+            energy_j=np.asarray([r["energy"] for r in hist]),
+            memory_gb=np.asarray([r["memory"] for r in hist]),
+        )
+        res.final_accuracy = self.ctx.engine.final_accuracy(
+            self.state.global_peft, self.state.device_peft, self.ctx.num_classes
+        )
+        return res
+
+    # --------------------------------------------------------- checkpointing
+    def save_checkpoint(self) -> str:
+        """Persist the full round state; a resumed run is bit-identical."""
+        state = self.state
+        arrays = {
+            "key": np.asarray(state.key),
+            "global_peft": state.global_peft,
+            "device_peft": {str(d): t for d, t in sorted(state.device_peft.items())},
+            "last_mask": {
+                str(d): np.asarray(m) for d, m in sorted(state.last_mask.items())
+            },
+        }
+        meta = {
+            "round_index": state.round_index,
+            "global_step": state.global_step,
+            "cum_time": state.cum_time,
+            "prev_acc": {str(d): v for d, v in state.prev_acc.items()},
+            "rng_state": state.rng.bit_generator.state,
+            "device_rng": [d._rng.bit_generator.state for d in self.ctx.devices],
+            "configurator": (
+                state.configurator.state_dict() if state.configurator else None
+            ),
+            "history": list(state.history),
+        }
+        return ckpt_lib.save_state(
+            self.checkpoint_dir, state.round_index, arrays, meta
+        )
+
+    def _restore_latest(self):
+        latest = ckpt_lib.latest_state_dir(self.checkpoint_dir)
+        if latest is None:
+            return  # nothing saved yet: fresh start
+        arrays, meta = ckpt_lib.load_state(latest)
+        state = self.state
+        if len(meta["device_rng"]) != len(self.ctx.devices):
+            raise ValueError(
+                f"checkpoint at {latest} was saved with "
+                f"{len(meta['device_rng'])} devices but this runner has "
+                f"{len(self.ctx.devices)}; resume requires an identical config"
+            )
+        if (meta["configurator"] is None) != (state.configurator is None):
+            raise ValueError(
+                f"checkpoint at {latest} disagrees with this runner about the "
+                "rate configurator; resume requires the same method/config"
+            )
+        state.rng.bit_generator.state = meta["rng_state"]
+        for dev, rng_state in zip(self.ctx.devices, meta["device_rng"]):
+            dev._rng.bit_generator.state = rng_state
+        configurator = state.configurator
+        if configurator is not None and meta["configurator"] is not None:
+            configurator.load_state_dict(meta["configurator"])
+        self.state = RoundState(
+            key=jnp.asarray(arrays["key"]),
+            global_peft=arrays["global_peft"],
+            device_peft={int(d): t for d, t in arrays["device_peft"].items()},
+            last_mask={int(d): m for d, m in arrays["last_mask"].items()},
+            round_index=meta["round_index"],
+            global_step=meta["global_step"],
+            cum_time=meta["cum_time"],
+            prev_acc={int(d): v for d, v in meta["prev_acc"].items()},
+            rng=state.rng,
+            configurator=configurator,
+            history=tuple(meta["history"]),
+        )
+
+
+def run_replicates(
+    seeds: Sequence[int],
+    cfg,
+    peft_cfg,
+    stld_cfg,
+    fed_cfg,
+    train_cfg,
+    *,
+    algorithm="droppeft",
+    rounds: Optional[int] = None,
+    target_accuracy: Optional[float] = None,
+    **runner_kwargs,
+) -> List[SimResult]:
+    """Multi-seed replication: one independent runner (fresh task partition,
+    device profiles, and model init) per seed."""
+    results = []
+    for seed in seeds:
+        runner = ExperimentRunner(
+            cfg, peft_cfg, stld_cfg, fed_cfg, train_cfg,
+            algorithm=fresh_algorithm(algorithm), seed=seed, **runner_kwargs,
+        )
+        results.append(runner.run(rounds=rounds, target_accuracy=target_accuracy))
+    return results

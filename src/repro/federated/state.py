@@ -1,0 +1,79 @@
+"""Round-loop state containers for the composable federated-algorithm API.
+
+:class:`RoundState` is the single immutable value threaded through every
+lifecycle hook of a :class:`~repro.federated.algorithms.FederatedAlgorithm`.
+It is registered as a JAX pytree: the array-valued fields (PRNG key, global
+PEFT tree, per-device PEFT trees, PTLS share masks) are pytree data, while
+host-side bookkeeping (round counters, the numpy cohort-sampling generator,
+the bandit configurator, the metric history) rides along as metadata.  Hooks
+never mutate a state in place — they return a new one via
+:func:`dataclasses.replace` — so the runner can checkpoint any round
+boundary and resume bit-exactly.
+
+:class:`RoundPlan` is what ``configure_round`` produces (cohort, dropout
+rates, progressive depth); :class:`CohortResults` carries the per-device
+outputs of ``cohort_step`` plus whatever later hooks attach (share masks,
+system-model costs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+
+@dataclass(frozen=True)
+class RoundState:
+    """Immutable snapshot of a federated experiment between rounds."""
+
+    key: Any                                  # jax PRNG key
+    global_peft: Any                          # server-side PEFT pytree
+    device_peft: Dict[int, Any] = field(default_factory=dict)
+    last_mask: Dict[int, Any] = field(default_factory=dict)   # PTLS share masks
+    round_index: int = 0
+    global_step: int = 0                      # LR-schedule offset
+    cum_time: float = 0.0                     # simulated wall-clock (s)
+    prev_acc: Dict[int, float] = field(default_factory=dict)
+    rng: Any = None                           # numpy Generator (cohorts, bandwidth)
+    configurator: Any = None                  # OnlineConfigurator | None
+    history: Tuple[dict, ...] = ()            # one metrics row per finished round
+
+
+jax.tree_util.register_dataclass(
+    RoundState,
+    data_fields=("key", "global_peft", "device_peft", "last_mask"),
+    meta_fields=(
+        "round_index",
+        "global_step",
+        "cum_time",
+        "prev_acc",
+        "rng",
+        "configurator",
+        "history",
+    ),
+)
+
+
+@dataclass
+class RoundPlan:
+    """What ``configure_round`` decided for one round."""
+
+    round_index: int
+    cohort: List[int]
+    rates: List[float]                 # per-device mean dropout rates
+    adaopt_depth: int                  # progressive depth (== num_layers when off)
+    start_pefts: Optional[list] = None # filled by the runner via client_init
+
+
+@dataclass
+class CohortResults:
+    """Per-device outputs of one trained cohort, in cohort order."""
+
+    plan: RoundPlan
+    pefts: list                        # updated PEFT trees
+    metrics: list                      # per-device dicts (loss/accuracy/...)
+    importances: list                  # PTLS layer importances
+    accuracies: List[float]            # local-val accuracy after the round
+    masks: Any = None                  # (N, L) bool share masks (aggregate)
+    cost: Any = None                   # SystemModel RoundCost (report)

@@ -4,10 +4,12 @@
         --method droppeft --rounds 20 --peft lora
 
 Runs the full DropPEFT system — STLD local fine-tuning, bandit dropout-rate
-configurator, PTLS aggregation — over the synthetic federated task, with
-checkpointing and a round-by-round report.  ``--smoke`` selects the reduced
-per-arch config (CPU-runnable); without it the assigned full config is used
-(TPU-scale — pair with the production mesh).
+configurator, PTLS aggregation — over the synthetic federated task through
+the ``repro.api`` facade, with checkpointing and a round-by-round report.
+``--smoke`` selects the reduced per-arch config (CPU-runnable); without it
+the assigned full config is used (TPU-scale — pair with the production
+mesh).  ``--resume`` continues bit-exactly from the newest run-state
+checkpoint under ``--state-dir``.
 """
 from __future__ import annotations
 
@@ -16,8 +18,7 @@ import json
 import os
 import time
 
-import numpy as np
-
+from repro import api
 from repro.checkpoint import save_pytree
 from repro.configs import (
     ARCH_IDS,
@@ -27,14 +28,13 @@ from repro.configs import (
     TrainConfig,
     get_config,
 )
-from repro.federated.simulator import METHODS, FederatedSimulator
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-1.7b", choices=list(ARCH_IDS))
     ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
-    ap.add_argument("--method", default="droppeft", choices=list(METHODS))
+    ap.add_argument("--method", default="droppeft", choices=api.list_methods())
     ap.add_argument("--peft", default="lora", choices=["lora", "adapter", "bitfit"])
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--devices", type=int, default=16)
@@ -48,12 +48,14 @@ def main():
     ap.add_argument("--target-acc", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="results/checkpoints")
+    ap.add_argument("--state-dir", default=None,
+                    help="save resumable run state each round to this dir")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest run-state checkpoint")
     ap.add_argument("--out", default="results/train_history.json")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    peft_cfg = PEFTConfig(method=args.peft)
-    stld_cfg = STLDConfig(mode=args.stld_mode, mean_rate=args.mean_rate)
     fed_cfg = FederatedConfig(
         num_devices=args.devices,
         devices_per_round=args.cohort,
@@ -63,15 +65,24 @@ def main():
         dirichlet_alpha=args.alpha,
         seed=args.seed,
     )
-    train_cfg = TrainConfig(learning_rate=args.lr, total_steps=args.rounds * args.local_steps)
 
     print(f"== DropPEFT federated fine-tuning: {cfg.name} ({args.method}, {args.peft}) ==")
     t0 = time.time()
-    sim = FederatedSimulator(
-        cfg, peft_cfg, stld_cfg, fed_cfg, train_cfg,
-        strategy=args.method, cost_cfg=get_config(args.arch), seed=args.seed,
+    runner = api.build(
+        args.method,
+        cfg=cfg,
+        peft_cfg=PEFTConfig(method=args.peft),
+        stld_cfg=STLDConfig(mode=args.stld_mode, mean_rate=args.mean_rate),
+        fed_cfg=fed_cfg,
+        train_cfg=TrainConfig(
+            learning_rate=args.lr, total_steps=args.rounds * args.local_steps
+        ),
+        cost_model=args.arch,
+        seed=args.seed,
+        checkpoint_dir=args.state_dir,
+        resume=args.resume,
     )
-    res = sim.run(rounds=args.rounds, target_accuracy=args.target_acc)
+    res = runner.run(rounds=args.rounds, target_accuracy=args.target_acc)
 
     for r in range(res.rounds):
         print(
@@ -83,7 +94,7 @@ def main():
     print(f"wall time: {time.time()-t0:.1f}s (simulated federated: {res.cum_time_s[-1]/3600:.2f}h)")
 
     os.makedirs(args.ckpt_dir, exist_ok=True)
-    save_pytree(sim.global_peft, os.path.join(args.ckpt_dir, cfg.name), res.rounds)
+    save_pytree(runner.state.global_peft, os.path.join(args.ckpt_dir, cfg.name), res.rounds)
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(

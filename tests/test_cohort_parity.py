@@ -4,16 +4,16 @@ configurator's vector-rate interface.
 The batched engine (``cohort_round`` = vmap of ``local_round``) must be a
 pure execution-strategy change: for identical seeds both modes consume the
 same PRNG streams and must produce numerically matching per-device PEFT
-trees, round metrics, PTLS importances, and accuracies.
+trees, round metrics, PTLS importances, and accuracies.  Exercised through
+the new ``repro.api`` / ``ExperimentRunner`` surface.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api
 from repro.configs import FederatedConfig, PEFTConfig, STLDConfig, TrainConfig, get_config
 from repro.core.configurator import OnlineConfigurator
-from repro.federated.simulator import FederatedSimulator
 
 _CFG = get_config("qwen3-1.7b", smoke=True).replace(
     num_layers=4, d_model=32, d_ff=64, num_heads=2, num_kv_heads=2,
@@ -23,14 +23,14 @@ _FED = FederatedConfig(num_devices=6, devices_per_round=4, local_steps=2, batch_
 _TRAIN = TrainConfig(learning_rate=5e-3, total_steps=100, warmup_steps=2)
 
 
-def _sim(mode, *, strategy="droppeft", stld_mode="cond", seed=3):
-    return FederatedSimulator(
-        _CFG,
-        PEFTConfig(method="lora", lora_rank=2),
-        STLDConfig(mode=stld_mode, mean_rate=0.5, gather_bucket=1),
-        _FED,
-        _TRAIN,
-        strategy=strategy,
+def _runner(mode, *, method="droppeft", stld_mode="cond", seed=3):
+    return api.build(
+        method,
+        cfg=_CFG,
+        peft_cfg=PEFTConfig(method="lora", lora_rank=2),
+        stld_cfg=STLDConfig(mode=stld_mode, mean_rate=0.5, gather_bucket=1),
+        fed_cfg=_FED,
+        train_cfg=_TRAIN,
         seed=seed,
         cohort_mode=mode,
     )
@@ -45,19 +45,28 @@ def _tree_allclose(a, b, atol=1e-5):
         )
 
 
+def _run_cohort(runner, cohort, rates):
+    state = runner.state
+    start = [state.global_peft for _ in cohort]
+    _, _, outs = runner.ctx.engine.run_cohort(
+        state.key, 0, cohort, rates, start, runner.ctx.num_classes,
+        runner.ctx.cfg.num_layers,
+    )
+    return outs
+
+
 @pytest.mark.parametrize("stld_mode", ["cond", "gather"])
 def test_cohort_round_parity(stld_mode):
     """Per-device PEFT trees, metrics, importances, and accuracies match
     between batched and sequential execution for the same PRNG keys.  The
     gather case exercises the static-count cohort grouping (two groups)."""
-    sim_s = _sim("sequential", stld_mode=stld_mode)
-    sim_b = _sim("batched", stld_mode=stld_mode)
+    run_s = _runner("sequential", stld_mode=stld_mode)
+    run_b = _runner("batched", stld_mode=stld_mode)
     cohort = [0, 1, 2, 3]
     rates = [0.25, 0.5, 0.25, 0.5]
-    num_classes = jnp.arange(sim_s.task.num_classes)
 
-    outs_s = sim_s._run_cohort(cohort, rates, num_classes, _CFG.num_layers)
-    outs_b = sim_b._run_cohort(cohort, rates, num_classes, _CFG.num_layers)
+    outs_s = _run_cohort(run_s, cohort, rates)
+    outs_b = _run_cohort(run_b, cohort, rates)
     assert len(outs_s) == len(outs_b) == 4
     for (p_s, m_s, imp_s, acc_s), (p_b, m_b, imp_b, acc_b) in zip(outs_s, outs_b):
         _tree_allclose(p_s, p_b)
@@ -71,8 +80,8 @@ def test_cohort_round_parity(stld_mode):
 
 def test_full_run_parity_smoke():
     """End-to-end: both modes trace identical accuracy/loss/cost curves."""
-    res_s = _sim("sequential").run(rounds=3)
-    res_b = _sim("batched").run(rounds=3)
+    res_s = _runner("sequential").run(rounds=3)
+    res_b = _runner("batched").run(rounds=3)
     np.testing.assert_allclose(res_s.accuracy, res_b.accuracy, atol=1e-5)
     np.testing.assert_allclose(res_s.loss, res_b.loss, atol=1e-4)
     np.testing.assert_allclose(res_s.cum_time_s, res_b.cum_time_s, rtol=1e-6)
@@ -82,10 +91,10 @@ def test_full_run_parity_smoke():
 
 
 def test_hetlora_forces_sequential_fallback():
-    sim = _sim("auto", strategy="fedhetlora")
-    assert sim.cohort_mode == "sequential"
+    runner = _runner("auto", method="fedhetlora")
+    assert runner.cohort_mode == "sequential"
     with pytest.raises(ValueError):
-        _sim("batched", strategy="fedhetlora")
+        _runner("batched", method="fedhetlora")
 
 
 def test_configurator_vector_rate_interface():

@@ -9,8 +9,8 @@ These are the paper-claim validation tests at smoke scale:
 import numpy as np
 import pytest
 
+from repro import api
 from repro.configs import FederatedConfig, PEFTConfig, STLDConfig, TrainConfig, get_config
-from repro.federated.simulator import FederatedSimulator
 
 _CFG = get_config("qwen3-1.7b", smoke=True).replace(
     num_layers=4, d_model=64, d_ff=128, num_heads=4, num_kv_heads=2,
@@ -21,16 +21,16 @@ _TRAIN = TrainConfig(learning_rate=5e-3, total_steps=400, warmup_steps=5)
 
 
 def _run(strategy, rounds=8, stld_mode="cond", peft="lora", seed=0):
-    sim = FederatedSimulator(
-        _CFG,
-        PEFTConfig(method=peft, lora_rank=4, adapter_dim=8),
-        STLDConfig(mode=stld_mode, mean_rate=0.5, gather_bucket=1),
-        _FED,
-        _TRAIN,
-        strategy=strategy,
+    return api.experiment(
+        strategy,
+        cfg=_CFG,
+        peft_cfg=PEFTConfig(method=peft, lora_rank=4, adapter_dim=8),
+        stld_cfg=STLDConfig(mode=stld_mode, mean_rate=0.5, gather_bucket=1),
+        fed_cfg=_FED,
+        train_cfg=_TRAIN,
         seed=seed,
+        rounds=rounds,
     )
-    return sim.run(rounds=rounds)
 
 
 @pytest.mark.slow

@@ -1,0 +1,127 @@
+"""The hook-based ExperimentRunner reproduces the pre-refactor
+``FederatedSimulator.run()`` bit-for-bit, for every registered method.
+
+The baseline is ``tests/_legacy_simulator.py`` — a frozen verbatim copy of
+the god-class as it stood before the api_redesign PR.  Parity is exact
+(``np.array_equal``, no tolerances): the redesign is a pure restructuring,
+so every SimResult array and the final all-device accuracy must be
+identical for identical seeds.  The deprecation shim, which delegates to
+the runner, must match too.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from _legacy_simulator import FederatedSimulator as LegacySimulator
+from repro import api
+from repro.configs import FederatedConfig, PEFTConfig, STLDConfig, TrainConfig, get_config
+from repro.data import make_task
+
+_CFG = get_config("qwen3-1.7b", smoke=True).replace(
+    num_layers=4, d_model=32, d_ff=64, num_heads=2, num_kv_heads=2,
+    vocab_size=128, dtype="float32",
+)
+_FED = FederatedConfig(num_devices=5, devices_per_round=3, local_steps=2, batch_size=8)
+_TRAIN = TrainConfig(learning_rate=5e-3, total_steps=100, warmup_steps=2)
+_ROUNDS = 3
+_FIELDS = (
+    "cum_time_s", "accuracy", "loss", "rates",
+    "active_fraction", "traffic_mb", "energy_j", "memory_gb",
+)
+
+
+def _task():
+    # SyntheticTask is stateless (plain arrays), so one instance is shared
+    return make_task(num_examples=256, vocab_size=128, seed=0)
+
+
+_TASK = _task()
+
+
+def _peft_cfg(method):
+    kind = "adapter" if method in ("fedadapter", "fedadaopt") else "lora"
+    return PEFTConfig(method=kind, lora_rank=2, adapter_dim=4)
+
+
+def _stld_cfg(mode="cond"):
+    return STLDConfig(mode=mode, mean_rate=0.5, gather_bucket=1)
+
+
+def _assert_results_equal(res_old, res_new):
+    assert res_old.rounds == res_new.rounds
+    for f in _FIELDS:
+        np.testing.assert_array_equal(
+            getattr(res_old, f), getattr(res_new, f), err_msg=f
+        )
+    assert res_old.final_accuracy == res_new.final_accuracy
+
+
+# droppeft (full method, batched) and fedhetlora (sequential + rank
+# heterogeneity) cover both execution paths in the fast tier; the remaining
+# methods ride in the slow tier
+_FAST = ("droppeft", "fedhetlora")
+
+
+@pytest.mark.parametrize(
+    "method",
+    [
+        m if m in _FAST else pytest.param(m, marks=pytest.mark.slow)
+        for m in api.list_methods()
+    ],
+)
+def test_runner_reproduces_legacy_bit_for_bit(method):
+    peft_cfg, stld_cfg = _peft_cfg(method), _stld_cfg()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = LegacySimulator(
+            _CFG, peft_cfg, stld_cfg, _FED, _TRAIN,
+            strategy=method, seed=3, task=_TASK,
+        )
+    res_old = legacy.run(rounds=_ROUNDS)
+    res_new = api.experiment(
+        method, cfg=_CFG, peft_cfg=peft_cfg, stld_cfg=stld_cfg,
+        fed_cfg=_FED, train_cfg=_TRAIN, seed=3, task=_TASK, rounds=_ROUNDS,
+    )
+    _assert_results_equal(res_old, res_new)
+
+
+@pytest.mark.slow
+def test_runner_reproduces_legacy_gather_mode():
+    """Gather-mode STLD exercises the static-count cohort partitioning."""
+    peft_cfg, stld_cfg = _peft_cfg("droppeft"), _stld_cfg("gather")
+    legacy = LegacySimulator(
+        _CFG, peft_cfg, stld_cfg, _FED, _TRAIN,
+        strategy="droppeft", seed=5, task=_TASK,
+    )
+    res_old = legacy.run(rounds=_ROUNDS)
+    res_new = api.experiment(
+        "droppeft", cfg=_CFG, peft_cfg=peft_cfg, stld_cfg=stld_cfg,
+        fed_cfg=_FED, train_cfg=_TRAIN, seed=5, task=_TASK, rounds=_ROUNDS,
+    )
+    _assert_results_equal(res_old, res_new)
+
+
+def test_shim_warns_and_delegates_identically():
+    """The retained FederatedSimulator surface is a pure delegation shim:
+    it must emit a DeprecationWarning and produce the same results as the
+    repro.api path."""
+    from repro.federated.simulator import FederatedSimulator
+
+    peft_cfg, stld_cfg = _peft_cfg("droppeft"), _stld_cfg()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        sim = FederatedSimulator(
+            _CFG, peft_cfg, stld_cfg, _FED, _TRAIN,
+            strategy="droppeft", seed=3, task=_TASK,
+        )
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    res_shim = sim.run(rounds=_ROUNDS)
+    res_api = api.experiment(
+        "droppeft", cfg=_CFG, peft_cfg=peft_cfg, stld_cfg=stld_cfg,
+        fed_cfg=_FED, train_cfg=_TRAIN, seed=3, task=_TASK, rounds=_ROUNDS,
+    )
+    _assert_results_equal(res_shim, res_api)
+    # the legacy attribute surface still works
+    assert sim.cohort_mode == "batched"
+    assert sim.global_peft is sim.runner.state.global_peft
