@@ -1,7 +1,10 @@
 """PEFT methods (LoRA / Adapter / BitFit) with frozen-base param partition.
 
-The PEFT tree mirrors the layer list: ``peft[l]`` is a dict consumed by
-``layer_apply``:
+The PEFT tree mirrors the layer stack and, like it, comes in two layouts
+(:mod:`repro.models.stacking`): the stacked-native layout (one leaf per
+PEFT param kind with a leading ``(L, ...)`` layer axis — the default for
+homogeneous stacks) and the per-layer list where ``peft[l]`` is a dict
+consumed by ``layer_apply``:
 
 * attention layers: ``{"attn": {"q"|"k"|"v"|"o": lora}, "mlp": {...},
   "adapter_attn", "adapter_mlp"}``
@@ -19,6 +22,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.models import stacking
 from repro.models.layers import layer_kind
 from repro.nn.linear import init_lora
 from repro.nn.mlp import init_adapter
@@ -97,11 +101,17 @@ def init_layer_peft(key, cfg, peft_cfg, l: int) -> dict:
     raise ValueError(f"unknown PEFT method {method!r}")
 
 
-def init_peft(key, cfg, peft_cfg):
-    """Per-layer PEFT tree (list of dicts, index-aligned with layers)."""
+def init_peft(key, cfg, peft_cfg, layout: str = "auto"):
+    """PEFT tree index-aligned with the layer stack.
+
+    ``layout='auto'`` (default) emits the stacked ``(L, ...)`` layout when
+    every layer's PEFT dict is structurally identical, else the per-layer
+    list; ``'list'``/``'stacked'`` force a layout.
+    """
     n = cfg.num_layers
     keys = jax.random.split(key, n)
-    return [init_layer_peft(keys[l], cfg, peft_cfg, l) for l in range(n)]
+    per_layer = [init_layer_peft(keys[l], cfg, peft_cfg, l) for l in range(n)]
+    return stacking.maybe_stack(per_layer, layout)
 
 
 def count_params(tree) -> int:
@@ -112,25 +122,33 @@ def flat_bytes(tree) -> int:
     return sum(int(x.size * x.dtype.itemsize) for x in jax.tree.leaves(tree))
 
 
+_LORA_TARGET_MAP = {
+    "q": ("attn", "wq"),
+    "k": ("attn", "wk"),
+    "v": ("attn", "wv"),
+    "o": ("attn", "wo"),
+    "gate": ("mlp", "gate"),
+    "up": ("mlp", "up"),
+    "down": ("mlp", "down"),
+}
+
+
+def _merge_one(layer, p, scale):
+    layer = jax.tree.map(lambda x: x, layer)  # shallow copy
+    for group in ("attn", "mlp"):
+        for t, lora in (p.get(group) or {}).items():
+            mod, name = _LORA_TARGET_MAP[t]
+            w = layer[mod][name]["w"]
+            # a @ b broadcasts over a leading stacked layer axis:
+            # (L, d_in, r) @ (L, r, d_out) -> (L, d_in, d_out)
+            layer[mod][name]["w"] = w + scale * (lora["a"] @ lora["b"]).astype(w.dtype)
+    return layer
+
+
 def merge_lora_into_base(base_layers, peft, scale: float):
     """Fold LoRA deltas into the frozen weights (deployment path):
-    W' = W + scale * A @ B.  Returns new base layer list."""
-    merged = []
-    _map = {
-        "q": ("attn", "wq"),
-        "k": ("attn", "wk"),
-        "v": ("attn", "wv"),
-        "o": ("attn", "wo"),
-        "gate": ("mlp", "gate"),
-        "up": ("mlp", "up"),
-        "down": ("mlp", "down"),
-    }
-    for layer, p in zip(base_layers, peft):
-        layer = jax.tree.map(lambda x: x, layer)  # shallow copy
-        for group in ("attn", "mlp"):
-            for t, lora in (p.get(group) or {}).items():
-                mod, name = _map[t]
-                w = layer[mod][name]["w"]
-                layer[mod][name]["w"] = w + scale * (lora["a"] @ lora["b"]).astype(w.dtype)
-        merged.append(layer)
-    return merged
+    W' = W + scale * A @ B.  Accepts either layer layout (both trees must
+    use the same one); returns the merged stack in that layout."""
+    if stacking.is_stacked(base_layers):
+        return _merge_one(base_layers, peft, scale)
+    return [_merge_one(layer, p, scale) for layer, p in zip(base_layers, peft)]

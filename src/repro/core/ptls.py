@@ -18,18 +18,49 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.models import stacking
 
-def layer_grad_norms(peft_grads_per_layer) -> jnp.ndarray:
-    """L2 norm of each layer's PEFT gradient.  Input: list (len L) of pytrees."""
-    norms = []
-    for g in peft_grads_per_layer:
-        leaves = jax.tree.leaves(g)
-        if not leaves:
-            norms.append(jnp.zeros((), dtype=jnp.float32))
-            continue
-        sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
-        norms.append(jnp.sqrt(sq))
-    return jnp.stack(norms)
+
+def layer_grad_norms(peft_grads, num_layers: int = 0) -> jnp.ndarray:
+    """L2 norm of each layer's PEFT gradient, shape ``(L,)``.
+
+    Accepts either layout: a list (len L) of per-layer pytrees, or a
+    stacked pytree whose leaves carry a leading ``(L, ...)`` layer axis.
+    A homogeneous list is canonicalized to the stacked layout first so both
+    layouts lower to the identical reduce subgraph and produce bit-identical
+    norms (XLA fuses per-leaf scalar reduces and trailing-axis reduces
+    differently).  ``num_layers`` is only consulted for leafless trees
+    (PEFT method ``'none'``).
+    """
+    if isinstance(peft_grads, (list, tuple)):
+        if stacking.is_stackable(list(peft_grads)):
+            peft_grads = stacking.stack_params(list(peft_grads))
+        else:
+            norms = []
+            for g in peft_grads:
+                leaves = jax.tree.leaves(g)
+                if not leaves:
+                    norms.append(jnp.zeros((), dtype=jnp.float32))
+                    continue
+                sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+                norms.append(jnp.sqrt(sq))
+            return jnp.stack(norms)
+    leaves = jax.tree.leaves(peft_grads)
+    if not leaves:
+        if num_layers <= 0:
+            raise ValueError(
+                "layer_grad_norms needs num_layers for a leafless stacked "
+                "tree (PEFT method 'none') — the layer count cannot be "
+                "inferred from an empty pytree"
+            )
+        return jnp.zeros((num_layers,), dtype=jnp.float32)
+    sq = sum(
+        jnp.sum(
+            jnp.square(x.astype(jnp.float32)), axis=tuple(range(1, x.ndim))
+        )
+        for x in leaves
+    )
+    return jnp.sqrt(sq)
 
 
 class ImportanceAccumulator:
@@ -67,14 +98,33 @@ def shared_layer_mask(importance, k: int) -> jnp.ndarray:
 def masked_layer_mean(updates, masks, prev_global):
     """Heterogeneous aggregation (paper Fig. 8).
 
-    updates: per-device list/stacked pytree-of-layers deltas,
-             stacked along a leading device axis: list (len L) of pytrees
-             whose leaves have shape (N, ...).
-    masks:   (N, L) bool — device n shares layer l.
-    prev_global: list (len L) of pytrees (no device axis).
+    Two layouts (matching the global tree's layout):
 
-    Returns the new global per-layer list.
+    * list layout — ``prev_global`` is a list (len L) of per-layer pytrees
+      and ``updates`` a list (len L) of pytrees whose leaves carry a
+      leading device axis ``(N, ...)``.  Per-layer python loop.
+    * stacked layout — ``prev_global`` is a stacked pytree with ``(L, ...)``
+      leaves and ``updates`` a pytree with ``(N, L, ...)`` leaves.  One
+      vectorized masked reduction over the device axis, no python loop.
+
+    masks: (N, L) bool — device n shares layer l.  Returns the new global
+    tree in ``prev_global``'s layout.
     """
+    if not isinstance(prev_global, (list, tuple)):
+        m = masks.astype(jnp.float32)          # (N, L)
+        denom = jnp.sum(m, axis=0)             # (L,)
+        has_any = denom > 0                    # (L,)
+
+        def avg(leaf_upd, leaf_prev):
+            w = m.reshape(m.shape + (1,) * (leaf_upd.ndim - 2))
+            mean = jnp.sum(leaf_upd * w, axis=0) / jnp.maximum(
+                denom.reshape((-1,) + (1,) * (leaf_prev.ndim - 1)), 1.0
+            )
+            keep = has_any.reshape((-1,) + (1,) * (leaf_prev.ndim - 1))
+            return jnp.where(keep, mean.astype(leaf_prev.dtype), leaf_prev)
+
+        return jax.tree.map(avg, updates, prev_global)
+
     num_layers = len(prev_global)
     out = []
     for l in range(num_layers):

@@ -35,6 +35,17 @@ def expected_active_layers(rates) -> jnp.ndarray:
     return jnp.sum(1.0 - rates)
 
 
+def _force_min_active(drops, rates, min_active: int):
+    """Enforce the active-layer floor: if fewer than ``min_active`` layers
+    survive, force-activate the dropped layers with the smallest rates."""
+    active = jnp.sum(~drops)
+    need = jnp.maximum(min_active - active, 0)
+    order = jnp.argsort(jnp.where(drops, rates, jnp.inf))
+    rank_of = jnp.argsort(order)
+    force = drops & (rank_of < need)
+    return drops & ~force
+
+
 def sample_drops(key, rates, min_active: int = 1):
     """Independent Bernoulli gates d_l (True = dropped), with a floor on the
     number of active layers: if fewer than ``min_active`` layers survive,
@@ -42,13 +53,7 @@ def sample_drops(key, rates, min_active: int = 1):
     num_layers = rates.shape[0]
     u = jax.random.uniform(key, (num_layers,))
     drops = u < rates
-    active = jnp.sum(~drops)
-    need = jnp.maximum(min_active - active, 0)
-    # force-activate the `need` dropped layers with the smallest rates
-    order = jnp.argsort(jnp.where(drops, rates, jnp.inf))
-    rank_of = jnp.argsort(order)
-    force = drops & (rank_of < need)
-    return drops & ~force
+    return _force_min_active(drops, rates, min_active)
 
 
 def sample_active_indices(key, rates, k: int):
@@ -76,17 +81,17 @@ def sample_drops_block(key, rates, block_size: int, min_active: int = 1):
     sub-stacks stay contiguous); used as an ablation."""
     num_layers = rates.shape[0]
     n_blocks = -(-num_layers // block_size)
-    block_rates = jnp.array(
-        [jnp.mean(rates[i * block_size : (i + 1) * block_size]) for i in range(n_blocks)]
+    # per-block mean rate via one padded reshape-mean (zero-padding keeps
+    # block sums exact; divide by the true per-block lengths) instead of a
+    # python list of per-slice jnp.mean ops
+    padded = jnp.pad(rates, (0, n_blocks * block_size - num_layers))
+    counts = jnp.full((n_blocks,), block_size, dtype=rates.dtype).at[-1].set(
+        num_layers - (n_blocks - 1) * block_size
     )
+    block_rates = padded.reshape(n_blocks, block_size).sum(axis=1) / counts
     block_drops = sample_drops(key, block_rates, min_active=1)
     drops = jnp.repeat(block_drops, block_size)[:num_layers]
-    active = jnp.sum(~drops)
-    need = jnp.maximum(min_active - active, 0)
-    order = jnp.argsort(jnp.where(drops, rates, jnp.inf))
-    rank_of = jnp.argsort(order)
-    force = drops & (rank_of < need)
-    return drops & ~force
+    return _force_min_active(drops, rates, min_active)
 
 
 def gate(block_fn: Callable, drop, h, cache=None):

@@ -67,11 +67,16 @@ class DropPEFT(FederatedAlgorithm):
             return state.global_peft
         own = state.device_peft[dev]
         mask = state.last_mask.get(dev)
+        if mask is None:
+            return state.global_peft
         # device keeps its own layers; refresh from global (download)
-        return [
-            state.global_peft[l] if (mask is None or bool(mask[l])) else own[l]
-            for l in range(self.ctx.cfg.num_layers)
-        ]
+        if isinstance(state.global_peft, (list, tuple)):
+            return [
+                state.global_peft[l] if bool(mask[l]) else own[l]
+                for l in range(self.ctx.cfg.num_layers)
+            ]
+        # stacked layout: one jit'd per-layer select, device-resident
+        return server_lib.select_layers(np.asarray(mask), state.global_peft, own)
 
     def compute_masks(self, state: RoundState, results: CohortResults):
         if not self.use_ptls:

@@ -61,7 +61,31 @@ def _logits_for_tokens(cfg, logits, tokens):
     return logits
 
 
-def make_client_fns(cfg, peft_cfg, stld_cfg, train_cfg, *, stack_mode: str = "unroll") -> ClientFns:
+def make_client_fns(
+    cfg,
+    peft_cfg,
+    stld_cfg,
+    train_cfg,
+    *,
+    stack_mode: str = "unroll",
+    donate: Optional[bool] = None,
+) -> ClientFns:
+    """Build the jit'd per-round client programs.
+
+    PEFT/base trees arrive in either layer layout; the stacked-native layout
+    shrinks the dispatch pytree from O(L·k) to O(k) leaves and removes every
+    traced ``jnp.stack`` of base-layer params from the compiled programs.
+
+    ``donate`` (default: auto — on for non-CPU backends, where XLA actually
+    implements buffer donation) donates the round-scoped buffers to their
+    jit'd programs so each round's PEFT/optimizer update can reuse the input
+    allocation instead of holding both copies live: ``local_round`` donates
+    its fresh AdamW state, ``cohort_round_eval`` its stacked cohort PEFT
+    input.  ``cohort_round`` never donates — its FedAdaOPT caller truncates
+    against the start stack after the call returns.
+    """
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
     lora_sc = peft_lib.lora_scale(peft_cfg) if peft_cfg.method == "lora" else 1.0
     sched = make_lr_schedule(
         train_cfg.schedule, train_cfg.learning_rate, train_cfg.warmup_steps, train_cfg.total_steps
@@ -117,7 +141,7 @@ def make_client_fns(cfg, peft_cfg, stld_cfg, train_cfg, *, stack_mode: str = "un
             (loss, metrics), grads = grad_fn(
                 peft_p, base_params, tokens, targets, mask, drops, active_idx
             )
-            gnorms = ptls.layer_grad_norms(grads)
+            gnorms = ptls.layer_grad_norms(grads, cfg.num_layers)
             imp = ptls.ImportanceAccumulator.update(imp, gnorms, drops_for_imp)
             grads, gn = clip_by_global_norm(grads, train_cfg.grad_clip)
             peft_p, opt = adamw_update(
@@ -146,7 +170,11 @@ def make_client_fns(cfg, peft_cfg, stld_cfg, train_cfg, *, stack_mode: str = "un
         importance = ptls.ImportanceAccumulator.importance(imp)
         return peft_params, opt_state, metrics, importance
 
-    local_round = jax.jit(_local_round, static_argnames=("num_active",))
+    local_round = jax.jit(
+        _local_round,
+        static_argnames=("num_active",),
+        donate_argnums=(2,) if donate else (),  # the per-round AdamW state
+    )
 
     @partial(jax.jit, static_argnames=("num_active",))
     def cohort_round(
@@ -213,7 +241,13 @@ def make_client_fns(cfg, peft_cfg, stld_cfg, train_cfg, *, stack_mode: str = "un
 
         return jax.vmap(one)(peft_stack, tokens, labels, valid)
 
-    @partial(jax.jit, static_argnames=("num_active",))
+    @partial(
+        jax.jit,
+        static_argnames=("num_active",),
+        # the stacked cohort PEFT input is rebuilt fresh every round; donate
+        # it so the round's output can alias the input allocation
+        donate_argnums=(1,) if donate else (),
+    )
     def cohort_round_eval(
         base_params,
         peft_stack,

@@ -22,9 +22,17 @@ Both modes consume identical PRNG streams (one ``jax.random.split`` fan-out
 per round, per-device global-step offsets in cohort order) and produce
 numerically matching per-device PEFT trees, metrics, and PTLS importances —
 see ``tests/test_cohort_parity.py``.
+
+PEFT trees flow through the engine in the stacked-native layout (one leaf
+per param kind, leading ``(L, ...)`` layer axis — see
+:mod:`repro.models.stacking`) whenever the stack is homogeneous, so the
+cohort stack/unstack helpers and every client dispatch handle O(k) leaves
+instead of O(L·k); the per-layer list layout (hetlora, legacy callers)
+keeps working through the same code paths.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Dict, List, Optional
 
 import jax
@@ -34,6 +42,7 @@ import numpy as np
 from repro.core import stld as stld_lib
 from repro.federated import server as server_lib
 from repro.federated.client import make_client_fns
+from repro.models import stacking
 from repro.models.registry import default_stack_mode
 from repro.optim import adamw_init
 
@@ -78,8 +87,10 @@ class CohortEngine:
         # fixed val pad size so the jit'd cohort_evaluate signature is stable
         self._val_pad = max(len(d.val_batch()["labels"]) for d in devices)
         self._val_cache: Dict[int, dict] = {}
+        self._all_val_stack = None  # cohort-wide stacked val tensors (final_accuracy)
         self._stack_cache: Dict[int, object] = {}
         self._unstack_cache: Dict[int, object] = {}
+        self._truncate_cache: Dict[tuple, object] = {}
         # FedHetLoRA: per-device LoRA rank + per-rank client programs
         self.device_rank: Optional[List[int]] = None
         self._het_fns: Dict[int, object] = {}
@@ -122,14 +133,25 @@ class CohortEngine:
             ]
         return key, new_gstep, outs
 
-    def _adaopt_truncate(self, peft_i, start_peft, adaopt_depth: int):
+    def _adaopt_truncate(self, peft_i, start_peft, adaopt_depth: int, axis: int = 0):
         """Progressive depth (FedAdaOPT): layers beyond the active depth keep
         their incoming values — their adapter updates are discarded BEFORE
-        evaluation, so reported accuracy measures the retained model."""
-        return [
-            peft_i[l] if l < adaopt_depth else start_peft[l]
-            for l in range(self.cfg.num_layers)
-        ]
+        evaluation, so reported accuracy measures the retained model.
+
+        Stacked trees use one jit'd ``jnp.where`` over the layer axis
+        (``axis`` = 1 for cohort-stacked ``(N, L, ...)`` leaves); exact
+        copies, bit-identical to the per-layer list selection."""
+        if isinstance(peft_i, (list, tuple)):
+            return [
+                peft_i[l] if l < adaopt_depth else start_peft[l]
+                for l in range(self.cfg.num_layers)
+            ]
+        fn = self._truncate_cache.get((adaopt_depth, axis))
+        if fn is None:
+            keep = np.arange(self.cfg.num_layers) < adaopt_depth
+            fn = jax.jit(partial(stacking.select_layers, keep, axis=axis))
+            self._truncate_cache[(adaopt_depth, axis)] = fn
+        return fn(peft_i, start_peft)
 
     def _stacked_train_batches(self, dev: int):
         fed = self.fed_cfg
@@ -205,7 +227,10 @@ class CohortEngine:
                     self.base_params, peft_stack, batch_stack,
                     rate_arr, key_arr, gstep_arr, num_active=na,
                 )
-                peft_out = self._adaopt_truncate(peft_out, peft_stack, adaopt_depth)
+                peft_out = self._adaopt_truncate(
+                    peft_out, peft_stack, adaopt_depth,
+                    axis=0 if isinstance(peft_out, (list, tuple)) else 1,
+                )
                 accs = self.client.cohort_evaluate(
                     self.base_params, peft_out, *val_args, num_classes
                 )
@@ -298,14 +323,16 @@ class CohortEngine:
             peft_stack = self._stack_trees(
                 [device_peft.get(dev, global_peft) for dev in devs]
             )
-            vals = [self._padded_val_batch(dev) for dev in devs]
+            if self._all_val_stack is None:
+                # val splits are static: build the cohort-wide stacked val
+                # tensors once instead of re-stacking them on every call
+                vals = [self._padded_val_batch(dev) for dev in devs]
+                self._all_val_stack = tuple(
+                    jnp.asarray(np.stack([v[k] for v in vals]))
+                    for k in ("tokens", "labels", "valid")
+                )
             accs = self.client.cohort_evaluate(
-                self.base_params,
-                peft_stack,
-                jnp.asarray(np.stack([v["tokens"] for v in vals])),
-                jnp.asarray(np.stack([v["labels"] for v in vals])),
-                jnp.asarray(np.stack([v["valid"] for v in vals])),
-                num_classes,
+                self.base_params, peft_stack, *self._all_val_stack, num_classes
             )
             return float(np.mean(np.asarray(accs)))
         accs = []

@@ -32,6 +32,7 @@ from repro.federated.algorithms import FederatedAlgorithm, get_algorithm
 from repro.federated.engine import CohortEngine
 from repro.federated.state import RoundState
 from repro.federated.system_model import SystemModel, sample_device
+from repro.models import stacking
 from repro.models.registry import init_params
 
 
@@ -274,6 +275,19 @@ class ExperimentRunner:
             self.checkpoint_dir, state.round_index, arrays, meta
         )
 
+    def _peft_native_layout(self, tree):
+        """Convert a checkpointed PEFT tree to this runner's native layout.
+
+        Pre-refactor checkpoints stored per-layer lists; the stacked-native
+        runner loads them transparently (and vice versa for heterogeneous
+        configs whose native layout is still the list)."""
+        native_stacked = stacking.is_stacked(self.ctx.init_global_peft)
+        if native_stacked and isinstance(tree, (list, tuple)):
+            return stacking.stack_params(list(tree))
+        if not native_stacked and stacking.is_stacked(tree):
+            return stacking.unstack_params(tree, self.ctx.cfg.num_layers)
+        return tree
+
     def _restore_latest(self):
         latest = ckpt_lib.latest_state_dir(self.checkpoint_dir)
         if latest is None:
@@ -299,8 +313,11 @@ class ExperimentRunner:
             configurator.load_state_dict(meta["configurator"])
         self.state = RoundState(
             key=jnp.asarray(arrays["key"]),
-            global_peft=arrays["global_peft"],
-            device_peft={int(d): t for d, t in arrays["device_peft"].items()},
+            global_peft=self._peft_native_layout(arrays["global_peft"]),
+            device_peft={
+                int(d): self._peft_native_layout(t)
+                for d, t in arrays["device_peft"].items()
+            },
             last_mask={int(d): m for d, m in arrays["last_mask"].items()},
             round_index=meta["round_index"],
             global_step=meta["global_step"],

@@ -9,6 +9,14 @@
                           sparsity-weighted averaged.
 * ``cohort_shared_masks`` — batched PTLS: per-device share masks from a
                           stacked (N, L) importance matrix in one jit'd call.
+* ``select_layers``     — per-layer global/local mix for PTLS client init
+                          on stacked trees (one jit'd ``jnp.where``).
+
+Every aggregator accepts both layer layouts (:mod:`repro.models.stacking`):
+the stacked-native layout collapses the per-layer python loops into a few
+vectorized ``(N, L, ...)`` reductions; the list layout keeps the original
+per-layer code path (exercised by the frozen legacy-simulator parity
+baseline) and produces bit-identical results.
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ptls
+from repro.models import stacking
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -35,60 +44,99 @@ def cohort_shared_masks(importances, k: int):
 
 
 def fedavg(client_trees: Sequence) -> object:
-    """Mean over clients of identical pytrees."""
+    """Mean over clients of identical pytrees (layout-agnostic)."""
     return jax.tree.map(lambda *xs: sum(xs) / len(xs), *client_trees)
 
 
-def ptls_aggregate(client_peft: Sequence[List], masks: np.ndarray, global_peft: List) -> List:
-    """client_peft: per-client per-layer PEFT lists; masks: (N, L) bool."""
-    num_layers = len(global_peft)
-    stacked = [
-        jax.tree.map(lambda *xs: jnp.stack(xs), *[c[l] for c in client_peft])
-        for l in range(num_layers)
-    ]
-    return ptls.masked_layer_mean(stacked, jnp.asarray(masks), global_peft)
+@jax.jit
+def select_layers(mask, global_tree, own_tree):
+    """Stacked-tree PTLS client init: layer ``l`` from ``global_tree`` where
+    ``mask[l]`` (shared -> refreshed from the server) else from
+    ``own_tree`` (personalized -> kept local).  Exact per-layer copies, so
+    it is bit-identical to the per-layer python selection on lists."""
+    return stacking.select_layers(mask, global_tree, own_tree)
+
+
+def ptls_aggregate(client_peft, masks, global_peft):
+    """Heterogeneous PTLS aggregation (paper Fig. 8).
+
+    ``client_peft``: per-client PEFT trees (sequence), or a single stacked
+    cohort tree whose leaves already carry a leading ``(N, ...)`` device
+    axis.  ``masks``: (N, L) bool.  ``global_peft`` sets the output layout.
+    """
+    if isinstance(global_peft, (list, tuple)):
+        # list layout: per-layer stack over clients, then per-layer masked mean
+        num_layers = len(global_peft)
+        stacked = [
+            jax.tree.map(lambda *xs: jnp.stack(xs), *[c[l] for c in client_peft])
+            for l in range(num_layers)
+        ]
+        return ptls.masked_layer_mean(stacked, jnp.asarray(masks), global_peft)
+    if isinstance(client_peft, (list, tuple)):
+        client_peft = jax.tree.map(lambda *xs: jnp.stack(xs), *client_peft)
+    return ptls.masked_layer_mean(client_peft, jnp.asarray(masks), global_peft)
 
 
 def _pad_lora(lora: dict, rank: int) -> dict:
+    """Zero-pad LoRA factors to ``rank`` along the rank axis; works for
+    per-layer ``(d, r)``/``(r, d)`` and stacked ``(L, d, r)``/``(L, r, d)``
+    leaves alike (axis-relative pad spec)."""
     a, b = lora["a"], lora["b"]
-    pa = jnp.pad(a, ((0, 0), (0, rank - a.shape[1])))
-    pb = jnp.pad(b, ((0, rank - b.shape[0]), (0, 0)))
-    return {"a": pa, "b": pb}
+    pad_a = [(0, 0)] * a.ndim
+    pad_a[-1] = (0, rank - a.shape[-1])
+    pad_b = [(0, 0)] * b.ndim
+    pad_b[-2] = (0, rank - b.shape[-2])
+    return {"a": jnp.pad(a, pad_a), "b": jnp.pad(b, pad_b)}
 
 
-def hetlora_aggregate(client_peft: Sequence[List], ranks: Sequence[int], max_rank: int) -> List:
+def _pad_layer(layer: dict, rank: int) -> dict:
+    return {
+        grp: {t: _pad_lora(lora, rank) for t, lora in sub.items()}
+        for grp, sub in layer.items()
+    }
+
+
+@jax.jit
+def _weighted_tree_mean(weights, *trees):
+    """Sparsity-weighted mean over identically-shaped client trees, one
+    jit'd dispatch (the padded hetlora aggregation body)."""
+    return jax.tree.map(
+        lambda *xs: sum(w * x for w, x in zip(weights, xs)), *trees
+    )
+
+
+def hetlora_aggregate(client_peft: Sequence, ranks: Sequence[int], max_rank: int):
     """FedHetLoRA: zero-pad heterogeneous-rank LoRA factors to ``max_rank``;
-    weight each client by its rank share (sparsity-weighted aggregation)."""
+    weight each client by its rank share (sparsity-weighted aggregation).
+
+    Accepts per-client trees in either layout; the padded aggregation body
+    runs as one jit'd call per layout/shape signature.
+    """
     weights = np.asarray(ranks, dtype=np.float64)
-    weights = weights / weights.sum()
+    weights = tuple(float(w) for w in weights / weights.sum())
+    if not isinstance(client_peft[0], (list, tuple)):
+        padded = [_pad_layer(c, max_rank) for c in client_peft]
+        return _weighted_tree_mean(weights, *padded)
     num_layers = len(client_peft[0])
     out = []
     for l in range(num_layers):
-        padded = []
-        for c, w in zip(client_peft, weights):
-            layer = c[l]
-            padded.append(
-                jax.tree.map(
-                    lambda x: x,
-                    {
-                        grp: {t: _pad_lora(lora, max_rank) for t, lora in sub.items()}
-                        for grp, sub in layer.items()
-                    },
-                )
-            )
-        agg = jax.tree.map(
-            lambda *xs: sum(w * x for w, x in zip(weights, xs)), *padded
-        )
-        out.append(agg)
+        padded = [_pad_layer(c[l], max_rank) for c in client_peft]
+        out.append(_weighted_tree_mean(weights, *padded))
     return out
 
 
-def truncate_lora_rank(peft_layers: List, rank: int) -> List:
-    """Project a max-rank global LoRA tree down to a client's local rank."""
+def truncate_lora_rank(peft_layers, rank: int):
+    """Project a max-rank global LoRA tree down to a client's local rank
+    (axis-relative slices: valid for both layer layouts)."""
     def trunc(lora):
-        return {"a": lora["a"][:, :rank], "b": lora["b"][:rank, :]}
+        return {"a": lora["a"][..., :rank], "b": lora["b"][..., :rank, :]}
 
-    return [
-        {grp: {t: trunc(lora) for t, lora in sub.items()} for grp, sub in layer.items()}
-        for layer in peft_layers
-    ]
+    def trunc_layer(layer):
+        return {
+            grp: {t: trunc(lora) for t, lora in sub.items()}
+            for grp, sub in layer.items()
+        }
+
+    if isinstance(peft_layers, (list, tuple)):
+        return [trunc_layer(layer) for layer in peft_layers]
+    return trunc_layer(peft_layers)

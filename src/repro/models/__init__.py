@@ -1,4 +1,13 @@
 """Architecture assembly: layer blocks, decoder stacks, registry."""
+from repro.models import stacking
 from repro.models.registry import build_model, init_params, model_apply
+from repro.models.stacking import stack_params, unstack_params
 
-__all__ = ["build_model", "init_params", "model_apply"]
+__all__ = [
+    "build_model",
+    "init_params",
+    "model_apply",
+    "stacking",
+    "stack_params",
+    "unstack_params",
+]

@@ -13,6 +13,7 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.models import stacking
 from repro.models.layers import init_layer, init_layer_cache
 from repro.models.transformer import _norm_apply, _norm_init, stack_apply
 from repro.nn.attention import encode_cross_kv
@@ -28,22 +29,24 @@ def sinusoidal_positions(length: int, dim: int):
     return pe
 
 
-def init_encdec(key, cfg):
+def init_encdec(key, cfg, layout: str = "auto"):
     k_enc, k_dec, k_emb, k_pos = jax.random.split(key, 4)
     enc_keys = jax.random.split(k_enc, cfg.num_encoder_layers)
     dec_keys = jax.random.split(k_dec, cfg.num_layers)
+    enc_layers = [
+        init_layer(enc_keys[l], cfg, l, force_kind="attn")
+        for l in range(cfg.num_encoder_layers)
+    ]
+    dec_layers = [init_layer(dec_keys[l], cfg, l) for l in range(cfg.num_layers)]
     return {
         "encoder": {
-            "layers": [
-                init_layer(enc_keys[l], cfg, l, force_kind="attn")
-                for l in range(cfg.num_encoder_layers)
-            ],
+            "layers": stacking.maybe_stack(enc_layers, layout),
             "final_norm": _norm_init(cfg, cfg.d_model),
         },
         "decoder": {
             "embed": normal_init(k_emb, (cfg.vocab_size, cfg.d_model)),
             "pos_embed": normal_init(k_pos, (cfg.max_seq_len, cfg.d_model)),
-            "layers": [init_layer(dec_keys[l], cfg, l) for l in range(cfg.num_layers)],
+            "layers": stacking.maybe_stack(dec_layers, layout),
             "final_norm": _norm_init(cfg, cfg.d_model),
         },
     }
@@ -80,11 +83,15 @@ def encode(
 
 
 def encoder_cross_kvs(params, cfg, enc_out):
-    """Precompute per-decoder-layer cross K/V once per sequence."""
-    return [
-        encode_cross_kv(layer["cross"], cfg, enc_out)
-        for layer in params["decoder"]["layers"]
-    ]
+    """Precompute per-decoder-layer cross K/V once per sequence.  Returns a
+    tree in the same layout as the decoder stack: one vmapped projection
+    over the stacked layer axis, or a per-layer list."""
+    layers = params["decoder"]["layers"]
+    if stacking.is_stacked(layers):
+        return jax.vmap(lambda cross: encode_cross_kv(cross, cfg, enc_out))(
+            layers["cross"]
+        )
+    return [encode_cross_kv(layer["cross"], cfg, enc_out) for layer in layers]
 
 
 def decode(

@@ -7,12 +7,24 @@
   text   : {"tokens": (B, S)}
   vision : {"tokens": (B, S), "patches": (B, P, d)}   (stub frontend)
   audio  : {"tokens": (B, S_dec), "frames": (B, S_enc, d)}  (stub frontend)
+
+Layer stacks are emitted **stacked-native** — one leaf per param kind with a
+leading ``(L, ...)`` layer axis — whenever the stack is homogeneous;
+heterogeneous stacks (hybrid interleaves) keep the per-layer list layout.
+``stack_params``/``unstack_params`` (re-exported from
+:mod:`repro.models.stacking`) convert between the two for the
+heterogeneous/hetlora and dry-run ``unroll`` paths.
 """
 from __future__ import annotations
 
 from typing import Optional
 
 from repro.models import encdec, transformer
+from repro.models.stacking import (  # noqa: F401  (public converter API)
+    is_stacked,
+    stack_params,
+    unstack_params,
+)
 
 
 def build_model(cfg):
@@ -20,10 +32,10 @@ def build_model(cfg):
     return init_params, model_apply
 
 
-def init_params(key, cfg):
+def init_params(key, cfg, layout: str = "auto"):
     if cfg.is_encoder_decoder:
-        return encdec.init_encdec(key, cfg)
-    return transformer.init_lm(key, cfg)
+        return encdec.init_encdec(key, cfg, layout)
+    return transformer.init_lm(key, cfg, layout)
 
 
 def model_apply(

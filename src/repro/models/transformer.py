@@ -1,16 +1,25 @@
 """Decoder-stack assembly with STLD-gated layers.
 
+Layer stacks arrive in either layout (see :mod:`repro.models.stacking`):
+**stacked** — one pytree with a leading ``(L, ...)`` layer axis on every
+leaf, the native layout for homogeneous stacks — or **list** — one pytree
+per layer, kept for heterogeneous stacks (hybrid interleaves) and legacy
+callers.  ``scan``/``gather``/``group`` consume a stacked tree directly
+(zero ``jnp.stack`` inside the traced program); a list is stacked at trace
+time as before.
+
 Stack execution modes (``stack_mode``):
 
-* ``unroll`` — python loop over layers.  Used by the dry-run so
-  ``cost_analysis`` counts every layer (a ``lax.scan`` body is costed once —
-  measured 10x undercount, see DESIGN.md §8) and by heterogeneous stacks.
-* ``scan``   — ``lax.scan`` over stacked layer params (homogeneous stacks):
-  fast compiles for deep models; the training default.
+* ``unroll`` — python loop over layers (per-layer slices of a stacked
+  tree).  Used by the dry-run so ``cost_analysis`` counts every layer (a
+  ``lax.scan`` body is costed once — measured 10x undercount, see DESIGN.md
+  §8) and by heterogeneous stacks.
+* ``scan``   — ``lax.scan`` over the stacked layer params (homogeneous
+  stacks): fast compiles for deep models; the training default.
 * ``group``  — ``lax.scan`` over groups of ``cfg.layer_period`` layers
   (Jamba's mamba/attn/MoE interleave repeats with period 8).
 * ``gather`` — gather-STLD (core.stld): static active count, traced indices,
-  scan over the gathered sub-stack.
+  a pure ``jnp.take`` on the stacked leaves, scan over the sub-stack.
 
 STLD gating (``drops``) composes with ``unroll``/``scan``/``group``;
 ``gather`` replaces it with index sampling.
@@ -23,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import stld
+from repro.models import stacking
 from repro.models.layers import init_layer, init_layer_cache, layer_apply
 from repro.nn.initializers import normal_init
 from repro.nn.norms import apply_layernorm, apply_rmsnorm, init_layernorm, init_rmsnorm
@@ -34,15 +44,16 @@ def _stack(trees: Sequence):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
 
 
-def _homogeneous(trees: Sequence) -> bool:
-    if not trees:
+def _as_stacked(trees):
+    """Stacked tree for scan-family modes: pass-through when already
+    stacked, trace-time stack for list-layout callers."""
+    return trees if stacking.is_stacked(trees) else _stack(list(trees))
+
+
+def _homogeneous(trees) -> bool:
+    if stacking.is_stacked(trees):
         return True
-    ref = jax.tree.structure(trees[0])
-    shapes = jax.tree.map(jnp.shape, trees[0])
-    for t in trees[1:]:
-        if jax.tree.structure(t) != ref or jax.tree.map(jnp.shape, t) != shapes:
-            return False
-    return True
+    return stacking.is_stackable(list(trees))
 
 
 def _norm_init(cfg, dim):
@@ -56,13 +67,20 @@ def _norm_apply(cfg, p, x):
 # --------------------------------------------------------------------------
 # init
 # --------------------------------------------------------------------------
-def init_lm(key, cfg):
-    """Decoder-only LM (also the VLM/MoE/hybrid/ssm backbone)."""
+def init_lm(key, cfg, layout: str = "auto"):
+    """Decoder-only LM (also the VLM/MoE/hybrid/ssm backbone).
+
+    ``layout`` picks the layer-stack representation: ``auto`` (default)
+    emits the stacked ``(L, ...)`` layout whenever the stack is homogeneous
+    and falls back to the per-layer list for heterogeneous stacks;
+    ``list``/``stacked`` force a layout (see :mod:`repro.models.stacking`).
+    """
     k_emb, k_layers, k_head = jax.random.split(key, 3)
     layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    layers = [init_layer(layer_keys[l], cfg, l) for l in range(cfg.num_layers)]
     params = {
         "embed": normal_init(k_emb, (cfg.vocab_size, cfg.d_model)),
-        "layers": [init_layer(layer_keys[l], cfg, l) for l in range(cfg.num_layers)],
+        "layers": stacking.maybe_stack(layers, layout),
         "final_norm": _norm_init(cfg, cfg.d_model),
     }
     if not cfg.tie_embeddings:
@@ -93,8 +111,12 @@ def stack_apply(
     active_idx=None,
     remat: bool = False,
 ):
-    """Run the layer stack.  Returns (h, aux_sum, new_caches)."""
-    num_layers = len(layers)
+    """Run the layer stack.  Returns (h, aux_sum, new_caches).
+
+    ``layers``/``peft``/``enc_kvs`` accept either layout: a per-layer list
+    or a stacked tree with a leading layer axis.
+    """
+    num_layers = stacking.stack_size(layers)
 
     def block(p_l, peft_l, enc_kv_l, h, cache_l):
         fn = lambda hh, cc: layer_apply(
@@ -118,9 +140,10 @@ def stack_apply(
         new_caches = [] if caches is not None else None
         for l in range(num_layers):
             cache_l = caches[l] if caches is not None else None
-            peft_l = peft[l] if peft is not None else None
-            enc_kv_l = enc_kvs[l] if enc_kvs is not None else None
-            fn = lambda hh, cc, p=layers[l], pf=peft_l, ek=enc_kv_l: block(p, pf, ek, hh, cc)
+            peft_l = stacking.layer_view(peft, l) if peft is not None else None
+            enc_kv_l = stacking.layer_view(enc_kvs, l) if enc_kvs is not None else None
+            p_l = stacking.layer_view(layers, l)
+            fn = lambda hh, cc, p=p_l, pf=peft_l, ek=enc_kv_l: block(p, pf, ek, hh, cc)
             if drops is not None:
                 h, aux, cache_l = stld.gate(fn, drops[l], h, cache_l)
             else:
@@ -135,11 +158,11 @@ def stack_apply(
     # compiled semantics as "gather", but every block appears in the HLO so
     # cost_analysis is exact (a lax.scan body is costed once — DESIGN.md §8).
     if stack_mode == "gather_unroll":
-        if not _homogeneous(list(layers)):
+        if not _homogeneous(layers):
             raise ValueError("gather_unroll requires a homogeneous stack")
         assert active_idx is not None, "gather_unroll needs active_idx"
-        stacked = _stack(list(layers))
-        peft_s = _stack(list(peft)) if peft is not None else None
+        stacked = _as_stacked(layers)
+        peft_s = _as_stacked(peft) if peft is not None else None
         take = lambda tree, i: jax.tree.map(lambda x: x[i], tree)
         aux_sum = jnp.zeros((), dtype=jnp.float32)
         for j in range(active_idx.shape[0]):
@@ -152,13 +175,13 @@ def stack_apply(
 
     # ------------------------------------------------------ scan / gather
     if stack_mode in ("scan", "gather"):
-        if not _homogeneous(list(layers)):
+        if not _homogeneous(layers):
             raise ValueError(f"stack_mode={stack_mode!r} requires a homogeneous stack")
         cols = {
-            "params": _stack(list(layers)),
-            "peft": _stack(list(peft)) if peft is not None else _EMPTY,
-            "caches": _stack(list(caches)) if caches is not None else _EMPTY,
-            "enc": _stack(list(enc_kvs)) if enc_kvs is not None else _EMPTY,
+            "params": _as_stacked(layers),
+            "peft": _as_stacked(peft) if peft is not None else _EMPTY,
+            "caches": _as_stacked(caches) if caches is not None else _EMPTY,
+            "enc": _as_stacked(enc_kvs) if enc_kvs is not None else _EMPTY,
             "drops": drops if drops is not None else _EMPTY,
         }
         if stack_mode == "gather":
@@ -195,13 +218,27 @@ def stack_apply(
         if num_layers % period:
             raise ValueError("group mode requires num_layers % layer_period == 0")
         n_groups = num_layers // period
-        by_slot = lambda seq: tuple(
-            _stack([seq[g * period + s] for g in range(n_groups)]) for s in range(period)
-        )
+
+        def by_slot(seq):
+            if stacking.is_stacked(seq):
+                # stacked (L, ...) leaves: a (n_groups, period) reshape + slot
+                # slice replaces the trace-time per-slot jnp.stack
+                grouped = jax.tree.map(
+                    lambda x: x.reshape((n_groups, period) + x.shape[1:]), seq
+                )
+                return tuple(
+                    jax.tree.map(lambda x: x[:, s], grouped) for s in range(period)
+                )
+            seq = list(seq)
+            return tuple(
+                _stack([seq[g * period + s] for g in range(n_groups)])
+                for s in range(period)
+            )
+
         cols = {
-            "params": by_slot(list(layers)),
-            "peft": by_slot(list(peft)) if peft is not None else _EMPTY,
-            "caches": by_slot(list(caches)) if caches is not None else _EMPTY,
+            "params": by_slot(layers),
+            "peft": by_slot(peft) if peft is not None else _EMPTY,
+            "caches": by_slot(caches) if caches is not None else _EMPTY,
             "drops": drops.reshape(n_groups, period) if drops is not None else _EMPTY,
         }
         order = [k for k, v in cols.items() if v is not _EMPTY]

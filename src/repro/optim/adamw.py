@@ -9,10 +9,42 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.models import stacking
+
+
+def _global_sq_sum(grads):
+    """Sum of squares over every element of ``grads``, computed through a
+    layout-canonical reduction.
+
+    A homogeneous per-layer **list** is first stacked into the ``(L, ...)``
+    leaf layout, so both layouts lower to the *identical* reduce subgraph
+    (same operand shapes, same fusion decisions) and produce bit-identical
+    totals — XLA fuses per-leaf scalar reduces and trailing-axis reduces
+    differently, so merely summing the same values in the same order is not
+    enough for cross-layout bit parity (the federated list-vs-stacked
+    parity baseline depends on this).
+    """
+    if isinstance(grads, (list, tuple)) and stacking.is_stackable(list(grads)):
+        grads = stacking.stack_params(list(grads))
+    leaves = [g.astype(jnp.float32) for g in jax.tree.leaves(grads)]
+    if not leaves:
+        return jnp.zeros((), dtype=jnp.float32)
+    lead = {g.shape[0] for g in leaves if g.ndim}
+    if not isinstance(grads, (list, tuple)) and len(lead) == 1 and all(
+        g.ndim for g in leaves
+    ):
+        # stacked layout: per-leaf trailing-axis reduce -> (L,) partials,
+        # arranged layer-major, one final vector reduce
+        parts = [
+            jnp.sum(jnp.square(g), axis=tuple(range(1, g.ndim))) for g in leaves
+        ]
+        return jnp.sum(jnp.stack(parts, axis=-1).reshape(-1))
+    # heterogeneous trees: plain per-leaf reduction (no cross-layout twin)
+    return jnp.sum(jnp.stack([jnp.sum(jnp.square(g)) for g in leaves]))
+
 
 def clip_by_global_norm(grads, max_norm: float):
-    leaves = jax.tree.leaves(grads)
-    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    gnorm = jnp.sqrt(_global_sq_sum(grads))
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
     return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
 

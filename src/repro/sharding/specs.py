@@ -76,9 +76,22 @@ def _spec_with_dim(shape, dim: int, tp: int, extra_leading: int = 0):
     return P(*spec)
 
 
+def _stacked_layer_lead(parts: tuple) -> int:
+    """1 when the leaf lives under a stacked-native ``layers`` subtree (its
+    shapes carry a leading layer axis the per-layer rules must skip), else
+    0.  List-layout leaves have an integer index right after ``layers``."""
+    for i, p in enumerate(parts):
+        if p == "layers":
+            nxt = parts[i + 1] if i + 1 < len(parts) else ""
+            return 0 if nxt.isdigit() else 1
+    return 0
+
+
 def spec_for_param(path, shape, tp: int, extra_leading: int = 0, expert_shard: str = "auto") -> P:
     """PartitionSpec for one weight leaf.  ``extra_leading`` accounts for a
-    stacked layer dim prepended by scan-mode stacking.
+    stacked layer dim prepended by scan-mode stacking; a stacked-native
+    ``layers`` subtree (leading layer axis already present in ``shape``) is
+    detected from the key path and handled the same way.
 
     ``expert_shard='ff'`` shards stacked expert weights on the within-expert
     dim instead of the expert dim — required by the decode weight-gather
@@ -87,6 +100,15 @@ def spec_for_param(path, shape, tp: int, extra_leading: int = 0, expert_shard: s
     parts = _path_parts(path)
     if any("peft" == p for p in parts):
         return P()
+    lead = _stacked_layer_lead(parts)
+    if lead:
+        inner = _spec_for_inner(parts, shape[lead:], tp, extra_leading, expert_shard)
+        inner = tuple(inner) + (None,) * (len(shape) - lead - len(tuple(inner)))
+        return P(*((None,) * lead + inner))
+    return _spec_for_inner(parts, shape, tp, extra_leading, expert_shard)
+
+
+def _spec_for_inner(parts, shape, tp: int, extra_leading: int, expert_shard: str) -> P:
     for needles, rank, prefs in _RULES:
         if expert_shard == "ff" and needles[0] == "experts":
             # drop the leading expert-dim preference
@@ -122,7 +144,11 @@ def param_specs(params, tp: int, extra_leading: int = 0, fsdp_axes: tuple = (), 
         if n_fsdp <= 1 or leaf.size < 1 << 20:
             return spec
         spec_list = list(spec) + [None] * (len(leaf.shape) - len(spec))
-        for dim in range(len(leaf.shape)):
+        # never ZeRO-shard the stacked layer axis: lax.scan iterates it, so a
+        # data-axis sharding there would reshard the operand every layer —
+        # FSDP belongs on a within-weight dim, as in the list layout
+        lead = _stacked_layer_lead(_path_parts(path))
+        for dim in range(lead, len(leaf.shape)):
             if spec_list[dim] is None and leaf.shape[dim] % n_fsdp == 0 and leaf.shape[dim] >= n_fsdp:
                 spec_list[dim] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
                 break

@@ -6,6 +6,12 @@ ONLY so ``tests/test_method_parity.py`` can prove the new
 ``ExperimentRunner`` reproduces the old ``run()`` SimResult arrays
 bit-for-bit for every registered method.  Do not import it from product
 code, and do not "fix" it — its behavior is the contract.
+
+(The only permitted deviation from the verbatim copy: ``init_peft`` calls
+pin ``layout="list"`` — the sole layout that existed pre-refactor — so this
+baseline keeps exercising the per-layer list code paths after the
+stacked-native layout became the library default.  The emitted values are
+unchanged; only the container layout is pinned.)
 """
 
 from __future__ import annotations
@@ -124,8 +130,8 @@ class FederatedSimulator:
         self._val_pad = max(len(d.val_batch()["labels"]) for d in self.devices)
 
         self.key, k1, k2 = jax.random.split(self.key, 3)
-        self.base_params = init_params(k1, cfg)
-        self.global_peft = peft_lib.init_peft(k2, cfg, peft_cfg)
+        self.base_params = init_params(k1, cfg, layout="list")
+        self.global_peft = peft_lib.init_peft(k2, cfg, peft_cfg, layout="list")
         self.device_peft: Dict[int, list] = {}
         stack_mode = default_stack_mode(cfg)
         self.client = make_client_fns(
@@ -164,7 +170,9 @@ class FederatedSimulator:
             self.max_rank = max(self.strategy.hetlora_ranks)
             # global tree holds the max rank
             self.global_peft = peft_lib.init_peft(
-                k2, cfg, peft_cfg.__class__(**{**peft_cfg.__dict__, "lora_rank": self.max_rank})
+                k2, cfg,
+                peft_cfg.__class__(**{**peft_cfg.__dict__, "lora_rank": self.max_rank}),
+                layout="list",
             )
             self._het_fns = {}
             for r in set(self.device_rank):

@@ -79,14 +79,31 @@ def test_hetlora_pad_truncate_roundtrip(key):
     from repro.federated import server as server_lib
 
     cfg = _CFG
+
+    def check_rank(tree, rank):
+        layers = tree if isinstance(tree, list) else [tree]
+        for layer in layers:
+            for sub in layer.values():
+                for lora in sub.values():
+                    assert lora["a"].shape[-1] == rank
+                    assert lora["b"].shape[-2] == rank
+
+    # stacked-native trees (the runner layout)
     p8 = peft_lib.init_peft(key, cfg, PEFTConfig(method="lora", lora_rank=8))
     p4 = server_lib.truncate_lora_rank(p8, 4)
-    for layer in p4:
-        for sub in layer.values():
-            for lora in sub.values():
-                assert lora["a"].shape[1] == 4 and lora["b"].shape[0] == 4
+    check_rank(p4, 4)
     agg = server_lib.hetlora_aggregate([p8, p4], [8, 4], 8)
-    for layer in agg:
-        for sub in layer.values():
-            for lora in sub.values():
-                assert lora["a"].shape[1] == 8
+    check_rank(agg, 8)
+    # legacy list layout goes through the same converters
+    p8l = peft_lib.init_peft(key, cfg, PEFTConfig(method="lora", lora_rank=8), layout="list")
+    p4l = server_lib.truncate_lora_rank(p8l, 4)
+    check_rank(p4l, 4)
+    aggl = server_lib.hetlora_aggregate([p8l, p4l], [8, 4], 8)
+    check_rank(aggl, 8)
+    # both layouts aggregate to bit-identical values
+    import jax
+
+    from repro.models import stacking
+
+    for a, b in zip(jax.tree.leaves(stacking.unstack_params(agg)), jax.tree.leaves(aggl)):
+        assert jnp.array_equal(a, b)

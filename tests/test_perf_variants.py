@@ -82,10 +82,12 @@ def test_fsdp_specs_divisible():
     shapes = eval_param_shapes(cfg)
     specs = S.param_specs(shapes, 16, fsdp_axes=("data",))
 
-    n_fsdp = 0
+    fsdp_bytes = 0
+    big_bytes = 0
 
     def check(leaf, spec):
-        nonlocal n_fsdp
+        nonlocal fsdp_bytes, big_bytes
+        has_fsdp = False
         for dim, axes in enumerate(spec):
             if axes is None:
                 continue
@@ -95,7 +97,27 @@ def test_fsdp_specs_divisible():
                 size *= 16
             assert leaf.shape[dim] % size == 0
             if "data" in names:
-                n_fsdp += 1
+                has_fsdp = True
+        size = int(np.prod(leaf.shape))
+        if size >= 1 << 20:  # the param_specs big-leaf threshold (elements)
+            nbytes = size * leaf.dtype.itemsize
+            big_bytes += nbytes
+            if has_fsdp:
+                fsdp_bytes += nbytes
 
     jax.tree.map(check, shapes, specs, is_leaf=lambda x: isinstance(x, P))
-    assert n_fsdp > 50  # most big weights got an fsdp dim
+    # most big-weight bytes got an fsdp dim (layout-independent: the stacked
+    # layer layout has 16x fewer but 16x larger leaves than the list layout)
+    assert big_bytes > 0 and fsdp_bytes / big_bytes > 0.8, (fsdp_bytes, big_bytes)
+
+    # the stacked layer axis must never be sharded: lax.scan iterates it, so
+    # a data-axis sharding there would reshard the operand every layer
+    def check_layer_axis(path, spec):
+        parts = S._path_parts(path)
+        if S._stacked_layer_lead(parts) and len(spec):
+            assert spec[0] is None, (parts, spec)
+        return spec
+
+    jax.tree_util.tree_map_with_path(
+        check_layer_axis, specs, is_leaf=lambda x: isinstance(x, P)
+    )

@@ -49,25 +49,36 @@ def test_all_specs_divisible(arch):
     jax.tree.map(check, shapes, specs, is_leaf=lambda x: isinstance(x, P))
 
 
+def _drop_layer_lead(parts, spec):
+    """Strip the leading stacked-layer None so per-layer rule assertions are
+    layout-independent (stacked-native leaves carry a leading (L, ...) axis
+    that always replicates)."""
+    if S._stacked_layer_lead(parts):
+        assert len(spec) == 0 or spec[0] is None
+        return P(*tuple(spec)[1:])
+    return spec
+
+
 def test_yi_attention_megatron_pattern():
     shapes, specs = _specs_for("yi-6b")
-    wq = _find(specs, "wq", "w")[0][1]
-    wo = _find(specs, "wo", "w")[0][1]
-    assert wq == P(None, "model")   # column parallel
-    assert wo == P("model", None)   # row parallel
+    wq_parts, wq = _find(specs, "wq", "w")[0]
+    wo_parts, wo = _find(specs, "wo", "w")[0]
+    assert _drop_layer_lead(wq_parts, wq) == P(None, "model")   # column parallel
+    assert _drop_layer_lead(wo_parts, wo) == P("model", None)   # row parallel
 
 
 def test_llama4_expert_parallel():
     shapes, specs = _specs_for("llama4-scout-17b-a16e")
-    eg = _find(specs, "experts", "gate")[0][1]
-    assert eg == P("model", None, None)  # 16 experts over 16-way axis
+    parts, eg = _find(specs, "experts", "gate")[0]
+    # 16 experts over 16-way axis
+    assert _drop_layer_lead(parts, eg) == P("model", None, None)
 
 
 def test_granite_expert_fallback():
     """40 experts don't divide 16 -> shard within-expert d_ff instead."""
     shapes, specs = _specs_for("granite-moe-3b-a800m")
-    eg = _find(specs, "experts", "gate")[0][1]
-    assert eg == P(None, None, "model")
+    parts, eg = _find(specs, "experts", "gate")[0]
+    assert _drop_layer_lead(parts, eg) == P(None, None, "model")
     # granite vocab 49155 is not divisible by 16 -> embed shards d_model
     emb = _find(specs, "embed")[0][1]
     assert emb == P(None, "model")
@@ -76,8 +87,8 @@ def test_granite_expert_fallback():
 def test_whisper_small_head_fallback():
     """6-head attention cannot TP 16-way on heads, but h*hd=384 divides."""
     shapes, specs = _specs_for("whisper-tiny")
-    wq = [x for p, x in _find(specs, "wq", "w")]
-    assert all(s == P(None, "model") for s in wq)
+    wq = [(p, x) for p, x in _find(specs, "wq", "w")]
+    assert all(_drop_layer_lead(p, s) == P(None, "model") for p, s in wq)
 
 
 def test_peft_replicated():
