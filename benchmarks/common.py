@@ -47,7 +47,8 @@ _UNSET = object()
 
 
 def run_sim(strategy, *, rounds=8, peft="lora", stld_mode="cond", fixed_rate=_UNSET,
-            distribution="incremental", alpha=1.0, seed=0):
+            distribution="incremental", alpha=1.0, seed=0, schedule=None,
+            device_profile=None):
     from repro import api
 
     return api.experiment(
@@ -61,6 +62,8 @@ def run_sim(strategy, *, rounds=8, peft="lora", stld_mode="cond", fixed_rate=_UN
         train_cfg=train_cfg(),
         cost_model=cost_model_cfg(),
         seed=seed,
+        schedule=schedule,
+        device_profile=device_profile,
         rounds=rounds,
     )
 

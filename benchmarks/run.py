@@ -14,6 +14,7 @@ import traceback
 from benchmarks import (
     cohort_bench,
     round_bench,
+    schedule_bench,
     fig2_breakdown,
     fig3_memory,
     fig6_dropout_sweep,
@@ -30,6 +31,7 @@ from benchmarks import (
 BENCHES = {
     "cohort": cohort_bench.run,
     "round": round_bench.run,
+    "schedule": schedule_bench.run,
     "table1": table1_overhead.run,
     "fig2": fig2_breakdown.run,
     "fig3": fig3_memory.run,

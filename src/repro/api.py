@@ -37,8 +37,15 @@ from repro.federated.algorithms import (
     registered_methods,
 )
 from repro.federated.runner import ExperimentRunner, SimResult, fresh_algorithm
+from repro.federated.scheduler import ScheduleConfig, resolve_schedule
 
-__all__ = ["build", "experiment", "replicate", "list_methods"]
+__all__ = [
+    "build",
+    "experiment",
+    "replicate",
+    "list_methods",
+    "ScheduleConfig",
+]
 
 
 def list_methods() -> List[str]:
@@ -87,6 +94,16 @@ def build(
     train_cfg: Optional[TrainConfig] = None,
     # method policy
     fixed_rate: Optional[float] = None,
+    # virtual-clock scheduling: a policy name ("sync" | "deadline" |
+    # "async-buffer") or a full ScheduleConfig; the scalar kwargs override
+    # individual fields of whichever config `schedule` resolves to
+    schedule: Union[str, ScheduleConfig, None] = None,
+    deadline_s: Optional[float] = None,
+    straggler: Optional[str] = None,
+    buffer_size: Optional[int] = None,
+    staleness_alpha: Optional[float] = None,
+    # pinned hardware mix (one profile name per device); None -> sampled
+    device_profile: Optional[Sequence[str]] = None,
     # system-model cost scale: None -> the training cfg; an arch name or a
     # ModelConfig -> cost accounting at that (e.g. full 1.7B) scale
     cost_model=None,
@@ -132,6 +149,14 @@ def build(
         cost_cfg=cost_model,
         seed=seed,
         cohort_mode=cohort_mode,
+        schedule=resolve_schedule(
+            schedule,
+            deadline_s=deadline_s,
+            straggler=straggler,
+            buffer_size=buffer_size,
+            staleness_alpha=staleness_alpha,
+        ),
+        device_profile=device_profile,
         checkpoint_dir=checkpoint_dir,
         checkpoint_every=checkpoint_every,
         resume=resume,

@@ -59,15 +59,17 @@ class OnlineConfigurator:
         explore_interval: int = 5,
         window_size: int = 8,
         seed: int = 0,
+        rate_floor: float = 0.0,
     ):
         self.rate_grid = list(rate_grid)
         self.num_candidates = num_candidates
         self.explore_rate = explore_rate
         self.explore_interval = explore_interval
         self.window_size = window_size
+        self.rate_floor = float(rate_floor)
         self._rng = random.Random(seed)
         self.arms: Dict[float, ArmStats] = {}
-        self.list_c: List[float] = [r for r in startup]  # candidate queue
+        self.list_c: List[float] = [r for r in startup if r >= self.rate_floor]
         self.history: List[float] = []  # evaluation order (for staleness)
         self.is_explore = True
         self._exploit_rounds_left = 0
@@ -109,9 +111,13 @@ class OnlineConfigurator:
             arm.add(da / max(t, 1e-9))
             arm.last_eval = self._round
             self.history.append(r)
-        # sliding window: discard overly stale arms (Line 12)
+        # sliding window: discard overly stale arms (Line 12), but never the
+        # current best — exploitation must always have its winner to return
+        best = self.best_rate() if self.arms else None
         recent = set(self.history[-self.window_size * max(1, len(self._pending)) :])
         for r in list(self.arms):
+            if r == best:
+                continue
             if r not in recent and self.arms[r].last_eval < self._round - self.window_size:
                 del self.arms[r]
 
@@ -130,9 +136,29 @@ class OnlineConfigurator:
                 self._refill_candidates()
 
     def best_rate(self) -> float:
-        if not self.arms:
-            return 0.5
-        return max(self.arms.values(), key=lambda a: a.reward).rate
+        """Highest-reward arm at or above the rate floor.
+
+        With no evidence yet, falls back to the feasible grid rate closest
+        to 0.5 (exactly 0.5 on the default grid, preserving the historical
+        default)."""
+        eligible = [a for a in self.arms.values() if a.rate >= self.rate_floor]
+        if not eligible:
+            grid = self._feasible_grid()
+            return min(grid, key=lambda r: abs(r - 0.5)) if grid else 0.5
+        return max(eligible, key=lambda a: a.reward).rate
+
+    def set_rate_floor(self, floor: float) -> None:
+        """Deadline-aware mode: restrict candidate rates to ``>= floor``.
+
+        The virtual-clock scheduler computes the floor as the smallest grid
+        rate whose predicted slowest-profile round time fits the deadline —
+        rates below it would always be cut off and waste exploration
+        rounds.  Existing below-floor arms stop being selected and age out
+        through the regular window eviction like any other idle arm."""
+        self.rate_floor = float(floor)
+        self.list_c = [r for r in self.list_c if r >= self.rate_floor]
+        if not self.list_c:
+            self._refill_candidates()
 
     # ------------------------------------------------------- serialization
     def state_dict(self) -> dict:
@@ -145,6 +171,7 @@ class OnlineConfigurator:
             ],
             "list_c": list(self.list_c),
             "history": list(self.history),
+            "rate_floor": self.rate_floor,
             "is_explore": self.is_explore,
             "exploit_rounds_left": self._exploit_rounds_left,
             "round": self._round,
@@ -162,6 +189,7 @@ class OnlineConfigurator:
         }
         self.list_c = list(state["list_c"])
         self.history = list(state["history"])
+        self.rate_floor = float(state.get("rate_floor", 0.0))
         self.is_explore = state["is_explore"]
         self._exploit_rounds_left = state["exploit_rounds_left"]
         self._round = state["round"]
@@ -183,20 +211,26 @@ class OnlineConfigurator:
         best = min(candidates, key=lambda c: abs(c - r))
         return best if abs(best - r) < 1e-5 else r
 
+    def _feasible_grid(self) -> List[float]:
+        grid = [r for r in self.rate_grid if r >= self.rate_floor]
+        return grid or ([max(self.rate_grid)] if self.rate_grid else [])
+
     def _refill_candidates(self):
         n_explore = max(1, int(self.num_candidates * self.explore_rate))
-        fresh = [r for r in self.rate_grid if r not in self.arms]
+        grid = self._feasible_grid()
+        fresh = [r for r in grid if r not in self.arms]
         self._rng.shuffle(fresh)
         new = fresh[:n_explore]
-        if not new:  # grid exhausted: resample anywhere
-            new = [self._rng.choice(self.rate_grid) for _ in range(n_explore)]
+        if not new and grid:  # grid exhausted: resample anywhere feasible
+            new = [self._rng.choice(grid) for _ in range(n_explore)]
         top = self._top_rates(self.num_candidates - len(new))
-        self.list_c = list(dict.fromkeys(new + top)) or [0.5]
+        self.list_c = list(dict.fromkeys(new + top)) or [self.best_rate()]
 
     def _keep_top_candidates(self):
         keep = max(1, int(self.num_candidates * (1.0 - self.explore_rate)))
-        self.list_c = self._top_rates(keep)
+        self.list_c = self._top_rates(keep) or [self.best_rate()]
 
     def _top_rates(self, k: int) -> List[float]:
-        ranked = sorted(self.arms.values(), key=lambda a: a.reward, reverse=True)
+        eligible = [a for a in self.arms.values() if a.rate >= self.rate_floor]
+        ranked = sorted(eligible, key=lambda a: a.reward, reverse=True)
         return [a.rate for a in ranked[:k]]

@@ -95,7 +95,7 @@ def shared_layer_mask(importance, k: int) -> jnp.ndarray:
     return mask.at[order[:k]].set(True)
 
 
-def masked_layer_mean(updates, masks, prev_global):
+def masked_layer_mean(updates, masks, prev_global, weights=None):
     """Heterogeneous aggregation (paper Fig. 8).
 
     Two layouts (matching the global tree's layout):
@@ -107,9 +107,16 @@ def masked_layer_mean(updates, masks, prev_global):
       leaves and ``updates`` a pytree with ``(N, L, ...)`` leaves.  One
       vectorized masked reduction over the device axis, no python loop.
 
-    masks: (N, L) bool — device n shares layer l.  Returns the new global
-    tree in ``prev_global``'s layout.
+    masks: (N, L) bool — device n shares layer l.  ``weights`` (optional,
+    (N,) positive) turns the per-layer mean into a weighted mean — used by
+    the virtual-clock scheduler's staleness-discounted aggregation.  A
+    weighted denominator can be < 1, so the weighted branch guards division
+    with ``where(denom > 0)`` instead of ``maximum(denom, 1)``; the
+    unweighted branch is untouched (bit-parity with the legacy simulator).
+    Returns the new global tree in ``prev_global``'s layout.
     """
+    if weights is not None:
+        return _weighted_masked_layer_mean(updates, masks, prev_global, weights)
     if not isinstance(prev_global, (list, tuple)):
         m = masks.astype(jnp.float32)          # (N, L)
         denom = jnp.sum(m, axis=0)             # (L,)
@@ -135,6 +142,40 @@ def masked_layer_mean(updates, masks, prev_global):
         def avg(leaf_upd, leaf_prev):
             w = m.reshape((-1,) + (1,) * (leaf_upd.ndim - 1))
             mean = jnp.sum(leaf_upd * w, axis=0) / jnp.maximum(denom, 1.0)
+            return jnp.where(has_any, mean.astype(leaf_prev.dtype), leaf_prev)
+
+        out.append(jax.tree.map(avg, updates[l], prev_global[l]))
+    return out
+
+
+def _weighted_masked_layer_mean(updates, masks, prev_global, weights):
+    """Staleness-weighted Fig.-8 aggregation: per layer l,
+    new_global_l = sum_{n shares l} w_n x_{n,l} / sum_{n shares l} w_n,
+    layers shared by nobody keep the previous global value."""
+    wv = jnp.asarray(weights, dtype=jnp.float32)
+    if not isinstance(prev_global, (list, tuple)):
+        m = masks.astype(jnp.float32) * wv[:, None]   # (N, L)
+        denom = jnp.sum(m, axis=0)                    # (L,)
+        has_any = denom > 0
+
+        def avg(leaf_upd, leaf_prev):
+            w = m.reshape(m.shape + (1,) * (leaf_upd.ndim - 2))
+            d = denom.reshape((-1,) + (1,) * (leaf_prev.ndim - 1))
+            mean = jnp.sum(leaf_upd * w, axis=0) / jnp.where(d > 0, d, 1.0)
+            keep = has_any.reshape((-1,) + (1,) * (leaf_prev.ndim - 1))
+            return jnp.where(keep, mean.astype(leaf_prev.dtype), leaf_prev)
+
+        return jax.tree.map(avg, updates, prev_global)
+
+    out = []
+    for l in range(len(prev_global)):
+        m = masks[:, l].astype(jnp.float32) * wv      # (N,)
+        denom = jnp.sum(m)
+        has_any = denom > 0
+
+        def avg(leaf_upd, leaf_prev):
+            w = m.reshape((-1,) + (1,) * (leaf_upd.ndim - 1))
+            mean = jnp.sum(leaf_upd * w, axis=0) / jnp.where(denom > 0, denom, 1.0)
             return jnp.where(has_any, mean.astype(leaf_prev.dtype), leaf_prev)
 
         out.append(jax.tree.map(avg, updates[l], prev_global[l]))

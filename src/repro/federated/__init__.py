@@ -6,6 +6,12 @@ from repro.federated.algorithms import (
 )
 from repro.federated.engine import CohortEngine
 from repro.federated.runner import ExperimentRunner, SimResult, run_replicates
+from repro.federated.scheduler import (
+    ScheduleConfig,
+    VirtualClockScheduler,
+    feasible_rate_floor,
+    resolve_schedule,
+)
 from repro.federated.simulator import METHODS, FederatedSimulator, Strategy
 from repro.federated.state import CohortResults, RoundPlan, RoundState
 from repro.federated.system_model import DEVICE_PROFILES, RoundCost, SystemModel
@@ -20,6 +26,10 @@ __all__ = [
     "registered_methods",
     "CohortEngine",
     "ExperimentRunner",
+    "ScheduleConfig",
+    "VirtualClockScheduler",
+    "feasible_rate_floor",
+    "resolve_schedule",
     "run_replicates",
     "SimResult",
     "RoundState",

@@ -80,17 +80,33 @@ class FederatedAlgorithm:
         return None
 
     # ------------------------------------------------------- lifecycle hooks
-    def configure_round(self, state: RoundState) -> RoundPlan:
-        """Sample the cohort and pick per-device dropout rates."""
+    def configure_round(self, state: RoundState, *, size=None, exclude=()) -> RoundPlan:
+        """Sample the cohort and pick per-device dropout rates.
+
+        The virtual-clock scheduler passes ``size`` (async-buffer refills
+        dispatch as many devices as just arrived) and ``exclude`` (devices
+        with an update still in flight cannot be sampled again).  The
+        default call — no kwargs — consumes the numpy RNG stream exactly as
+        the pre-scheduler loop did, which the sync-parity suite relies on.
+        """
         fed = self.ctx.fed_cfg
-        cohort = [
-            int(d)
-            for d in state.rng.choice(
-                fed.num_devices,
-                size=min(fed.devices_per_round, fed.num_devices),
-                replace=False,
-            )
-        ]
+        want = fed.devices_per_round if size is None else size
+        if exclude:
+            free = [d for d in range(fed.num_devices) if d not in exclude]
+            n = min(want, len(free))
+            cohort = [
+                int(free[i])
+                for i in state.rng.choice(len(free), size=n, replace=False)
+            ]
+        else:
+            cohort = [
+                int(d)
+                for d in state.rng.choice(
+                    fed.num_devices,
+                    size=min(want, fed.num_devices),
+                    replace=False,
+                )
+            ]
         return RoundPlan(
             round_index=state.round_index,
             cohort=cohort,
@@ -123,8 +139,14 @@ class FederatedAlgorithm:
         return replace(state, key=key, global_step=gstep), results
 
     def aggregate(self, state: RoundState, results: CohortResults) -> RoundState:
-        """Compute share masks, persist device models, merge the global."""
-        masks = self.compute_masks(state, results)
+        """Compute share masks, persist device models, merge the global.
+
+        Reuses ``results.masks`` when the scheduler already computed them at
+        dispatch time (deadline/async policies need per-device upload
+        fractions before the round closes)."""
+        masks = results.masks if results.masks is not None else self.compute_masks(
+            state, results
+        )
         results.masks = masks
         device_peft = dict(state.device_peft)
         last_mask = dict(state.last_mask)
@@ -136,11 +158,16 @@ class FederatedAlgorithm:
             state, device_peft=device_peft, last_mask=last_mask, global_peft=global_peft
         )
 
-    def report(self, state: RoundState, results: CohortResults):
-        """System-model accounting + feedback; returns (state, history row)."""
+    def round_cost(self, state: RoundState, results: CohortResults):
+        """System-model cost accounting for a trained cohort.
+
+        Draws one bandwidth sample per cohort member (in cohort order, from
+        ``state.rng``) and runs the vectorized ``SystemModel`` round cost;
+        fills ``results.cost`` and returns ``(cost, active_fracs)``.  Shared
+        by the synchronous :meth:`report` and the virtual-clock scheduler's
+        dispatch so the two accountings can never drift apart."""
         ctx, fed = self.ctx, self.ctx.fed_cfg
-        plan = results.plan
-        cohort = plan.cohort
+        cohort = results.plan.cohort
         n = len(cohort)
         bandwidths = np.array([sample_bandwidth(state.rng) for _ in cohort])
         active_fracs = [
@@ -163,6 +190,14 @@ class FederatedAlgorithm:
             share_fraction=results.masks.mean(axis=1),
         )
         results.cost = cost
+        return cost, active_fracs
+
+    def report(self, state: RoundState, results: CohortResults):
+        """System-model accounting + feedback; returns (state, history row)."""
+        plan = results.plan
+        cohort = plan.cohort
+        n = len(cohort)
+        cost, active_fracs = self.round_cost(state, results)
         round_times = cost.total_time_s
         cum_time = state.cum_time + float(round_times.max())  # synchronous round
         mean_acc = float(np.mean(results.accuracies))
@@ -179,6 +214,7 @@ class FederatedAlgorithm:
             "traffic": float(cost.traffic_mb.sum()),
             "energy": float(cost.energy_j.sum()),
             "memory": float(cost.memory_gb.max()),
+            "arrivals": n,  # synchronous barrier: everyone arrives
         }
         return replace(state, cum_time=cum_time, prev_acc=prev_acc), row
 
@@ -198,6 +234,8 @@ class FederatedAlgorithm:
         return np.ones((n, self.ctx.cfg.num_layers), dtype=bool)
 
     def merge(self, state: RoundState, results: CohortResults):
+        if results.weights is not None:
+            return self.ctx.engine.weighted_fedavg(results.pefts, results.weights)
         return self.ctx.engine.fedavg(results.pefts)
 
     def feedback(self, state: RoundState, results: CohortResults, round_times):

@@ -59,7 +59,11 @@ class FedHetLoRA(FederatedAlgorithm):
 
     def merge(self, state: RoundState, results: CohortResults):
         client_ranks = [self.device_rank[dev] for dev in results.plan.cohort]
-        return server_lib.hetlora_aggregate(results.pefts, client_ranks, self.max_rank)
+        # staleness weights (async/carry scheduling) multiply the rank shares
+        return server_lib.hetlora_aggregate(
+            results.pefts, client_ranks, self.max_rank,
+            extra_weights=results.weights,
+        )
 
 
 @register("fedadaopt")

@@ -11,6 +11,7 @@ paper's ablation study:
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import numpy as np
@@ -52,7 +53,7 @@ class DropPEFT(FederatedAlgorithm):
         if not (self.use_configurator and self.stld):
             return None
         fed = ctx.fed_cfg
-        return OnlineConfigurator(
+        cfgor = OnlineConfigurator(
             rate_grid=fed.rate_grid,
             num_candidates=fed.num_candidates,
             explore_rate=fed.explore_rate,
@@ -60,6 +61,30 @@ class DropPEFT(FederatedAlgorithm):
             window_size=fed.window_size,
             seed=ctx.seed,
         )
+        # deadline-aware mode: dropout ratios the slowest profile can never
+        # finish within the round budget are infeasible arms — cap the
+        # candidate space at the predicted feasible floor so exploration
+        # rounds are not wasted on guaranteed stragglers
+        sched = getattr(ctx, "schedule", None)
+        if (
+            sched is not None
+            and sched.policy == "deadline"
+            and math.isfinite(sched.deadline_s)
+        ):
+            from repro.federated.scheduler import feasible_rate_floor
+
+            cfgor.set_rate_floor(
+                feasible_rate_floor(
+                    ctx.system,
+                    ctx.device_profile,
+                    sched.deadline_s,
+                    rate_grid=fed.rate_grid,
+                    batch=fed.batch_size,
+                    seq=ctx.task.seq_len,
+                    local_steps=fed.local_steps,
+                )
+            )
+        return cfgor
 
     def client_init(self, state: RoundState, dev: int):
         """Shared layers from the global model; personalized layers local."""
@@ -89,8 +114,11 @@ class DropPEFT(FederatedAlgorithm):
     def merge(self, state: RoundState, results: CohortResults):
         if not self.use_ptls:
             return super().merge(state, results)
+        # async/carry scheduling sets staleness-discount weights; None keeps
+        # the bit-exact unweighted PTLS masked mean
+        weights = None if results.weights is None else np.asarray(results.weights)
         return self.ctx.engine.ptls_aggregate(
-            results.pefts, results.masks, state.global_peft
+            results.pefts, results.masks, state.global_peft, weights=weights
         )
 
     def feedback(self, state: RoundState, results: CohortResults, round_times):

@@ -83,6 +83,7 @@ class CohortEngine:
         # server aggregation is pure tree math: jit it so a round's
         # aggregation is one dispatch instead of hundreds of tiny ops
         self.fedavg = jax.jit(server_lib.fedavg)
+        self.weighted_fedavg = jax.jit(server_lib.weighted_fedavg)
         self.ptls_aggregate = jax.jit(server_lib.ptls_aggregate)
         # fixed val pad size so the jit'd cohort_evaluate signature is stable
         self._val_pad = max(len(d.val_batch()["labels"]) for d in devices)

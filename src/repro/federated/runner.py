@@ -18,7 +18,7 @@ On top of the plain loop it provides what the god-class could not:
 from __future__ import annotations
 
 import copy
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -30,6 +30,11 @@ from repro.core import peft as peft_lib
 from repro.data import DeviceDataset, dirichlet_partition, make_task
 from repro.federated.algorithms import FederatedAlgorithm, get_algorithm
 from repro.federated.engine import CohortEngine
+from repro.federated.scheduler import (
+    ScheduleConfig,
+    VirtualClockScheduler,
+    resolve_schedule,
+)
 from repro.federated.state import RoundState
 from repro.federated.system_model import SystemModel, sample_device
 from repro.models import stacking
@@ -39,8 +44,8 @@ from repro.models.registry import init_params
 @dataclass
 class SimResult:
     rounds: int
-    cum_time_s: np.ndarray           # (R,)
-    accuracy: np.ndarray             # (R,) mean cohort val accuracy
+    cum_time_s: np.ndarray           # (R,) scheduler virtual clock at each aggregation
+    accuracy: np.ndarray             # (R,) mean val accuracy of aggregated updates
     loss: np.ndarray                 # (R,)
     rates: np.ndarray                # (R,) mean dropout rate used
     active_fraction: np.ndarray      # (R,) measured E[L~]/L
@@ -48,6 +53,7 @@ class SimResult:
     energy_j: np.ndarray             # (R,) cohort total
     memory_gb: np.ndarray            # (R,) max per-device footprint
     final_accuracy: float = 0.0
+    arrivals: Optional[np.ndarray] = None  # (R,) updates aggregated per step
 
     def time_to_accuracy(self, target: float, *, sustained: bool = False) -> Optional[float]:
         """Simulated time until ``accuracy >= target``.
@@ -82,13 +88,21 @@ class ExperimentContext:
     init_global_peft: Any
     num_classes: Any               # jnp.arange(task.num_classes)
     engine: Optional[CohortEngine] = None
+    schedule: Optional[ScheduleConfig] = None  # virtual-clock scheduling policy
 
 
 def _build_context(
-    cfg, peft_cfg, stld_cfg, fed_cfg, train_cfg, *, task=None, cost_cfg=None, seed=0
+    cfg, peft_cfg, stld_cfg, fed_cfg, train_cfg, *, task=None, cost_cfg=None, seed=0,
+    device_profile=None,
 ):
     """Replicates the legacy simulator's construction order exactly so the
-    numpy/JAX RNG streams (device profiles, param init) are unchanged."""
+    numpy/JAX RNG streams (device profiles, param init) are unchanged.
+
+    ``device_profile`` (optional) pins the hardware mix instead of sampling
+    it — benchmarks and golden tests use it to build e.g. a guaranteed
+    mixed tx2/nx/agx cohort.  Pinning skips the profile RNG draws, so a
+    pinned run is not stream-comparable with a sampled one.
+    """
     rng = np.random.default_rng(seed)
     key = jax.random.PRNGKey(seed)
     task = task or make_task(vocab_size=cfg.vocab_size, seed=seed)
@@ -96,7 +110,15 @@ def _build_context(
         task.labels, fed_cfg.num_devices, fed_cfg.dirichlet_alpha, seed=seed
     )
     devices = [DeviceDataset(task, idx, seed=seed + i) for i, idx in enumerate(parts)]
-    device_profile = [sample_device(rng) for _ in range(fed_cfg.num_devices)]
+    if device_profile is None:
+        device_profile = [sample_device(rng) for _ in range(fed_cfg.num_devices)]
+    else:
+        device_profile = list(device_profile)
+        if len(device_profile) != fed_cfg.num_devices:
+            raise ValueError(
+                f"device_profile has {len(device_profile)} entries for "
+                f"{fed_cfg.num_devices} devices"
+            )
     key, k1, k2 = jax.random.split(key, 3)
     base_params = init_params(k1, cfg)
     global_peft = peft_lib.init_peft(k2, cfg, peft_cfg)
@@ -149,6 +171,8 @@ class ExperimentRunner:
         cost_cfg=None,
         seed: int = 0,
         cohort_mode: str = "auto",
+        schedule: "ScheduleConfig | str" = "sync",
+        device_profile=None,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 1,
         resume: bool = False,
@@ -160,13 +184,22 @@ class ExperimentRunner:
             # the same prototype would silently rebind its context
             algorithm = fresh_algorithm(algorithm)
         self.algorithm = algorithm
+        self.schedule = resolve_schedule(schedule)
+        if checkpoint_dir and self.schedule.keeps_in_flight_state:
+            raise ValueError(
+                f"checkpointing is not supported with "
+                f"policy={self.schedule.policy!r}/straggler="
+                f"{self.schedule.straggler!r}: in-flight updates live across "
+                "aggregation boundaries and cannot be serialized"
+            )
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = max(1, checkpoint_every)
 
         ctx, rng, key, base_params = _build_context(
             cfg, peft_cfg, stld_cfg, fed_cfg, train_cfg,
-            task=task, cost_cfg=cost_cfg, seed=seed,
+            task=task, cost_cfg=cost_cfg, seed=seed, device_profile=device_profile,
         )
+        ctx.schedule = self.schedule  # visible to bind()/build_configurator
         self.ctx = ctx
         global_peft = algorithm.bind(ctx)
 
@@ -194,6 +227,7 @@ class ExperimentRunner:
             rng=rng,
             configurator=algorithm.build_configurator(ctx),
         )
+        self.scheduler = VirtualClockScheduler(self, self.schedule)
         if resume:
             if not checkpoint_dir:
                 raise ValueError("resume=True requires checkpoint_dir")
@@ -203,31 +237,13 @@ class ExperimentRunner:
     def run(
         self, rounds: Optional[int] = None, target_accuracy: Optional[float] = None
     ) -> SimResult:
-        algo = self.algorithm
-        total = rounds or self.ctx.fed_cfg.rounds
-        state = self.state
-        while state.round_index < total:
-            plan = algo.configure_round(state)
-            plan.start_pefts = [algo.client_init(state, dev) for dev in plan.cohort]
-            state, results = algo.cohort_step(state, plan)
-            state = algo.aggregate(state, results)
-            state, row = algo.report(state, results)
-            state = replace(
-                state,
-                round_index=state.round_index + 1,
-                history=state.history + (row,),
-            )
-            self.state = state
-            hit_target = target_accuracy is not None and row["acc"] >= target_accuracy
-            if self.checkpoint_dir and (
-                state.round_index % self.checkpoint_every == 0
-                or state.round_index == total
-                or hit_target
-            ):
-                self.save_checkpoint()
-            if hit_target:
-                break
-        return self.result()
+        """Drive the round loop through the virtual-clock scheduler.
+
+        The scheduler owns the loop for every policy; ``schedule="sync"``
+        calls the lifecycle hooks in the exact pre-scheduler order, so its
+        results are bit-identical to the historical barrier loop
+        (``tests/test_schedule_parity.py``)."""
+        return self.scheduler.run(rounds=rounds, target_accuracy=target_accuracy)
 
     def result(self) -> SimResult:
         hist = self.state.history
@@ -241,6 +257,7 @@ class ExperimentRunner:
             traffic_mb=np.asarray([r["traffic"] for r in hist]),
             energy_j=np.asarray([r["energy"] for r in hist]),
             memory_gb=np.asarray([r["memory"] for r in hist]),
+            arrivals=np.asarray([r.get("arrivals", -1) for r in hist]),
         )
         res.final_accuracy = self.ctx.engine.final_accuracy(
             self.state.global_peft, self.state.device_peft, self.ctx.num_classes
@@ -263,6 +280,8 @@ class ExperimentRunner:
             "round_index": state.round_index,
             "global_step": state.global_step,
             "cum_time": state.cum_time,
+            "virtual_time": state.virtual_time,
+            "server_version": state.server_version,
             "prev_acc": {str(d): v for d, v in state.prev_acc.items()},
             "rng_state": state.rng.bit_generator.state,
             "device_rng": [d._rng.bit_generator.state for d in self.ctx.devices],
@@ -322,6 +341,10 @@ class ExperimentRunner:
             round_index=meta["round_index"],
             global_step=meta["global_step"],
             cum_time=meta["cum_time"],
+            # pre-scheduler checkpoints (no virtual clock) resume with
+            # virtual_time == cum_time, which is exact for sync rounds
+            virtual_time=meta.get("virtual_time", meta["cum_time"]),
+            server_version=meta.get("server_version", meta["round_index"]),
             prev_acc={int(d): v for d, v in meta["prev_acc"].items()},
             rng=state.rng,
             configurator=configurator,

@@ -48,6 +48,31 @@ def fedavg(client_trees: Sequence) -> object:
     return jax.tree.map(lambda *xs: sum(xs) / len(xs), *client_trees)
 
 
+def staleness_weights(staleness, alpha: float) -> np.ndarray:
+    """FedBuff-style staleness discount: w_i ∝ 1/(1+s_i)^alpha, normalized.
+
+    ``staleness`` is the per-update server-version lag (0 = trained on the
+    current global model).  ``alpha=0`` is uniform weighting — callers
+    should pass ``weights=None`` in that case so aggregation stays on the
+    bit-exact unweighted path.
+    """
+    s = np.asarray(staleness, dtype=np.float64)
+    w = 1.0 / np.power(1.0 + s, float(alpha))
+    return w / w.sum()
+
+
+def weighted_fedavg(client_trees: Sequence, weights) -> object:
+    """Staleness-weighted mean over clients of identical pytrees.
+
+    ``weights`` must already be normalized (sum to 1); layout-agnostic like
+    :func:`fedavg` and jit-safe (weights may be traced).
+    """
+    w = jnp.asarray(weights, dtype=jnp.float32).ravel()
+    return jax.tree.map(
+        lambda *xs: sum(w[i] * x for i, x in enumerate(xs)), *client_trees
+    )
+
+
 @jax.jit
 def select_layers(mask, global_tree, own_tree):
     """Stacked-tree PTLS client init: layer ``l`` from ``global_tree`` where
@@ -57,12 +82,15 @@ def select_layers(mask, global_tree, own_tree):
     return stacking.select_layers(mask, global_tree, own_tree)
 
 
-def ptls_aggregate(client_peft, masks, global_peft):
+def ptls_aggregate(client_peft, masks, global_peft, weights=None):
     """Heterogeneous PTLS aggregation (paper Fig. 8).
 
     ``client_peft``: per-client PEFT trees (sequence), or a single stacked
     cohort tree whose leaves already carry a leading ``(N, ...)`` device
     axis.  ``masks``: (N, L) bool.  ``global_peft`` sets the output layout.
+    ``weights`` (optional, (N,)) switches to the staleness-weighted masked
+    mean used by the async virtual-clock scheduler; ``None`` keeps the
+    bit-exact unweighted path.
     """
     if isinstance(global_peft, (list, tuple)):
         # list layout: per-layer stack over clients, then per-layer masked mean
@@ -71,10 +99,10 @@ def ptls_aggregate(client_peft, masks, global_peft):
             jax.tree.map(lambda *xs: jnp.stack(xs), *[c[l] for c in client_peft])
             for l in range(num_layers)
         ]
-        return ptls.masked_layer_mean(stacked, jnp.asarray(masks), global_peft)
+        return ptls.masked_layer_mean(stacked, jnp.asarray(masks), global_peft, weights)
     if isinstance(client_peft, (list, tuple)):
         client_peft = jax.tree.map(lambda *xs: jnp.stack(xs), *client_peft)
-    return ptls.masked_layer_mean(client_peft, jnp.asarray(masks), global_peft)
+    return ptls.masked_layer_mean(client_peft, jnp.asarray(masks), global_peft, weights)
 
 
 def _pad_lora(lora: dict, rank: int) -> dict:
@@ -105,15 +133,25 @@ def _weighted_tree_mean(weights, *trees):
     )
 
 
-def hetlora_aggregate(client_peft: Sequence, ranks: Sequence[int], max_rank: int):
+def hetlora_aggregate(
+    client_peft: Sequence, ranks: Sequence[int], max_rank: int, extra_weights=None
+):
     """FedHetLoRA: zero-pad heterogeneous-rank LoRA factors to ``max_rank``;
     weight each client by its rank share (sparsity-weighted aggregation).
+
+    ``extra_weights`` (optional, (N,)) multiplies the rank shares — the
+    scheduler passes staleness weights through it; the product is
+    renormalized.  ``None`` keeps the bit-exact rank-only weighting.
 
     Accepts per-client trees in either layout; the padded aggregation body
     runs as one jit'd call per layout/shape signature.
     """
     weights = np.asarray(ranks, dtype=np.float64)
-    weights = tuple(float(w) for w in weights / weights.sum())
+    weights = weights / weights.sum()
+    if extra_weights is not None:
+        weights = weights * np.asarray(extra_weights, dtype=np.float64)
+        weights = weights / weights.sum()
+    weights = tuple(float(w) for w in weights)
     if not isinstance(client_peft[0], (list, tuple)):
         padded = [_pad_layer(c, max_rank) for c in client_peft]
         return _weighted_tree_mean(weights, *padded)

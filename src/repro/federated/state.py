@@ -34,6 +34,8 @@ class RoundState:
     round_index: int = 0
     global_step: int = 0                      # LR-schedule offset
     cum_time: float = 0.0                     # simulated wall-clock (s)
+    virtual_time: float = 0.0                 # scheduler clock (== cum_time in sync)
+    server_version: int = 0                   # aggregations applied (staleness base)
     prev_acc: Dict[int, float] = field(default_factory=dict)
     rng: Any = None                           # numpy Generator (cohorts, bandwidth)
     configurator: Any = None                  # OnlineConfigurator | None
@@ -47,6 +49,8 @@ jax.tree_util.register_dataclass(
         "round_index",
         "global_step",
         "cum_time",
+        "virtual_time",
+        "server_version",
         "prev_acc",
         "rng",
         "configurator",
@@ -77,3 +81,5 @@ class CohortResults:
     accuracies: List[float]            # local-val accuracy after the round
     masks: Any = None                  # (N, L) bool share masks (aggregate)
     cost: Any = None                   # SystemModel RoundCost (report)
+    staleness: Any = None              # (N,) int server-version lag (async/carry)
+    weights: Any = None                # (N,) staleness aggregation weights | None

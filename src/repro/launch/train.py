@@ -9,7 +9,10 @@ the ``repro.api`` facade, with checkpointing and a round-by-round report.
 ``--smoke`` selects the reduced per-arch config (CPU-runnable); without it
 the assigned full config is used (TPU-scale — pair with the production
 mesh).  ``--resume`` continues bit-exactly from the newest run-state
-checkpoint under ``--state-dir``.
+checkpoint under ``--state-dir``.  ``--schedule`` selects the
+virtual-clock scheduling policy (``sync`` barrier, ``deadline`` with
+``--deadline``/``--straggler``, FedBuff-style ``async-buffer`` with
+``--buffer-size``/``--staleness-alpha``).
 """
 from __future__ import annotations
 
@@ -43,6 +46,20 @@ def main():
     ap.add_argument("--batch-size", type=int, default=16)
     ap.add_argument("--alpha", type=float, default=1.0, help="Dirichlet non-IIDness")
     ap.add_argument("--stld-mode", default="cond", choices=["cond", "gather"])
+    ap.add_argument("--schedule", default=None,
+                    choices=["sync", "deadline", "async-buffer"],
+                    help="virtual-clock scheduling policy (default sync; "
+                    "--deadline/--straggler imply deadline, --buffer-size "
+                    "implies async-buffer)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="round budget in virtual seconds (deadline policy)")
+    ap.add_argument("--straggler", default=None, choices=["drop", "carry"],
+                    help="what happens to updates that miss the deadline "
+                    "(default drop)")
+    ap.add_argument("--buffer-size", type=int, default=None,
+                    help="async-buffer: aggregate every K arrivals")
+    ap.add_argument("--staleness-alpha", type=float, default=None,
+                    help="staleness discount exponent: w = 1/(1+s)^alpha")
     ap.add_argument("--mean-rate", type=float, default=0.5)
     ap.add_argument("--lr", type=float, default=5e-3)
     ap.add_argument("--target-acc", type=float, default=None)
@@ -79,6 +96,11 @@ def main():
         ),
         cost_model=args.arch,
         seed=args.seed,
+        schedule=args.schedule,
+        deadline_s=args.deadline,
+        straggler=args.straggler,
+        buffer_size=args.buffer_size,
+        staleness_alpha=args.staleness_alpha,
         checkpoint_dir=args.state_dir,
         resume=args.resume,
     )
@@ -101,6 +123,7 @@ def main():
             {
                 "arch": cfg.name,
                 "method": args.method,
+                "schedule": runner.schedule.policy,
                 "accuracy": res.accuracy.tolist(),
                 "cum_time_s": res.cum_time_s.tolist(),
                 "final_accuracy": res.final_accuracy,

@@ -1,9 +1,18 @@
-"""PTLS (Eq. 6, Fig. 8) and the bandit configurator (Algorithm 1)."""
+"""PTLS (Eq. 6, Fig. 8) and the bandit configurator (Algorithm 1).
+
+The property tests (via ``_hypothesis_fallback``: real hypothesis when the
+wheel is present, a seeded parametrize shim offline) pin the configurator
+invariants the virtual-clock scheduler leans on: float32 round-trips never
+mint duplicate arms, window eviction never deletes the current best arm,
+``next_round(as_array=True)`` entries always lie on ``rate_grid``, and
+rewards stay finite as round times approach zero.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_fallback import given, settings, st
 from repro.core import ptls
 from repro.core.configurator import OnlineConfigurator
 
@@ -72,3 +81,135 @@ def test_configurator_phase_alternation():
         rates = cfgor.next_round(2)
         cfgor.report(rates, [0.1] * 2, [1.0] * 2)
     assert True in phases and False in phases
+
+
+# --------------------------------------------------------------------------
+# property tests (Algorithm-1 invariants the scheduler relies on)
+# --------------------------------------------------------------------------
+
+_GRIDS = (
+    (0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9),
+    (0.1, 0.25, 0.4, 0.55, 0.7),
+    (0.05, 0.5, 0.95),
+)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    grid_idx=st.integers(min_value=0, max_value=2),
+    n_devices=st.integers(min_value=1, max_value=6),
+    rounds=st.integers(min_value=1, max_value=25),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_float32_roundtrip_never_mints_duplicate_arms(grid_idx, n_devices, rounds, seed):
+    """Feeding ``next_round(as_array=True)``'s float32 vector straight back
+    into ``report`` must snap onto the exact arm keys: the arm table never
+    grows a near-duplicate key and never leaves the grid."""
+    grid = _GRIDS[grid_idx]
+    cfgor = OnlineConfigurator(
+        rate_grid=grid, startup=grid[:2], num_candidates=3,
+        explore_rate=0.34, explore_interval=2, window_size=4, seed=seed,
+    )
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        rates = cfgor.next_round(n_devices, as_array=True)
+        assert rates.dtype == np.float32
+        cfgor.report(
+            rates,
+            rng.uniform(0.0, 1.0, n_devices).astype(np.float32),
+            rng.uniform(0.5, 2.0, n_devices).astype(np.float32),
+        )
+        keys = sorted(cfgor.arms)
+        assert len(keys) <= len(grid)
+        for a, b in zip(keys, keys[1:]):
+            assert b - a > 1e-5, f"float32 round-trip minted duplicate arms {a}, {b}"
+        for k in keys:
+            assert min(abs(k - g) for g in grid) < 1e-6, f"off-grid arm {k!r}"
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    window=st.integers(min_value=2, max_value=6),
+    seed=st.integers(min_value=0, max_value=999),
+)
+def test_window_eviction_never_deletes_best_arm(window, seed):
+    """An arm that won big long ago must survive the staleness eviction
+    while other arms are evaluated for many windows: exploitation must
+    always be able to return to the known best."""
+    grid = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9)
+    cfgor = OnlineConfigurator(
+        rate_grid=grid, startup=(0.9,), num_candidates=2,
+        explore_rate=0.5, explore_interval=1, window_size=window, seed=seed,
+    )
+    cfgor.next_round(1)
+    cfgor.report([0.9], [100.0], [1.0])       # overwhelming early winner
+    losers = [r for r in grid if r != 0.9]
+    for i in range(window * 4):
+        cfgor.next_round(1)
+        cfgor.report([losers[i % len(losers)]], [0.001], [1.0])
+        assert 0.9 in cfgor.arms, "window eviction deleted the best arm"
+        assert cfgor.best_rate() == 0.9
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    grid_idx=st.integers(min_value=0, max_value=2),
+    n_devices=st.integers(min_value=1, max_value=8),
+    rounds=st.integers(min_value=1, max_value=20),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_next_round_array_entries_lie_on_rate_grid(grid_idx, n_devices, rounds, seed):
+    grid = _GRIDS[grid_idx]
+    cfgor = OnlineConfigurator(
+        rate_grid=grid, startup=grid[-2:], num_candidates=3,
+        explore_rate=0.34, explore_interval=3, window_size=5, seed=seed,
+    )
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        rates = cfgor.next_round(n_devices, as_array=True)
+        assert rates.shape == (n_devices,)
+        for r in rates:
+            assert min(abs(float(r) - g) for g in grid) < 1e-6, (
+                f"rate {r!r} not on grid {grid}"
+            )
+        cfgor.report(rates, rng.uniform(0.0, 1.0, n_devices), rng.uniform(0.5, 2.0, n_devices))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.floats(min_value=0.0, max_value=1e-12),
+    gain=st.floats(min_value=0.0, max_value=1.0),
+)
+def test_zero_round_times_keep_rewards_finite(t, gain):
+    """The max(t, 1e-9) guard: a virtual round that closes instantly (e.g.
+    an async buffer of already-finished arrivals) must not mint inf/nan
+    rewards."""
+    cfgor = OnlineConfigurator()
+    rates = cfgor.next_round(2)
+    cfgor.report(rates, [gain] * 2, [t] * 2)
+    for arm in cfgor.arms.values():
+        assert np.isfinite(arm.reward)
+    assert np.isfinite(cfgor.best_rate())
+
+
+def test_rate_floor_caps_candidates():
+    """Deadline-aware mode: once a floor is set, every subsequent rate the
+    configurator hands out is feasible (>= floor) and still on the grid."""
+    grid = (0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9)
+    cfgor = OnlineConfigurator(rate_grid=grid, startup=(0.2, 0.5, 0.7), seed=0)
+    rng = np.random.default_rng(0)
+    for _ in range(3):  # accumulate some low-rate evidence first
+        rates = cfgor.next_round(4)
+        cfgor.report(rates, rng.uniform(0, 1, 4), [1.0] * 4)
+    cfgor.set_rate_floor(0.4)
+    for _ in range(12):
+        rates = cfgor.next_round(4)
+        assert all(r >= 0.4 for r in rates), rates
+        assert all(any(abs(r - g) < 1e-6 for g in grid) for r in rates)
+        cfgor.report(rates, rng.uniform(0, 1, 4), [1.0] * 4)
+    assert cfgor.best_rate() >= 0.4
+    # floor round-trips through the checkpoint snapshot
+    blob = cfgor.state_dict()
+    fresh = OnlineConfigurator(rate_grid=grid)
+    fresh.load_state_dict(blob)
+    assert fresh.rate_floor == 0.4

@@ -1,0 +1,184 @@
+"""The virtual-clock scheduler contains the barrier loop as a special case.
+
+``schedule="sync"`` must reproduce the PR-2 runner's ``SimResult`` arrays
+bit-for-bit (the frozen legacy simulator remains the transitively-checked
+anchor via ``test_method_parity.py``), and ``schedule="deadline"`` with an
+infinite budget, ``straggler="drop"`` and ``staleness_alpha=0`` must match
+``sync`` exactly — same pattern, same ``np.array_equal`` strictness, for
+every registered method.  The deadline path runs the full event machinery
+(dispatch-time cost accounting, priority-queue arrival pops, arrival-set
+aggregation), so exact equality here proves the async engine's bookkeeping
+does not perturb the math, only the schedule.
+"""
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from _legacy_simulator import FederatedSimulator as LegacySimulator
+from repro import api
+from repro.configs import FederatedConfig, PEFTConfig, STLDConfig, TrainConfig, get_config
+from repro.data import make_task
+from repro.federated.scheduler import ScheduleConfig
+
+_CFG = get_config("qwen3-1.7b", smoke=True).replace(
+    num_layers=4, d_model=32, d_ff=64, num_heads=2, num_kv_heads=2,
+    vocab_size=128, dtype="float32",
+)
+_FED = FederatedConfig(num_devices=5, devices_per_round=3, local_steps=2, batch_size=8)
+_TRAIN = TrainConfig(learning_rate=5e-3, total_steps=100, warmup_steps=2)
+_ROUNDS = 3
+_FIELDS = (
+    "cum_time_s", "accuracy", "loss", "rates",
+    "active_fraction", "traffic_mb", "energy_j", "memory_gb", "arrivals",
+)
+
+_TASK = make_task(num_examples=256, vocab_size=128, seed=0)
+
+# the deadline config that must be indistinguishable from the barrier loop
+_SYNC_AS_DEADLINE = ScheduleConfig(
+    policy="deadline", deadline_s=math.inf, straggler="drop", staleness_alpha=0.0
+)
+
+
+def _peft_cfg(method):
+    kind = "adapter" if method in ("fedadapter", "fedadaopt") else "lora"
+    return PEFTConfig(method=kind, lora_rank=2, adapter_dim=4)
+
+
+def _run(method, schedule):
+    return api.experiment(
+        method,
+        cfg=_CFG,
+        peft_cfg=_peft_cfg(method),
+        stld_cfg=STLDConfig(mode="cond", mean_rate=0.5, gather_bucket=1),
+        fed_cfg=_FED,
+        train_cfg=_TRAIN,
+        seed=3,
+        task=_TASK,
+        rounds=_ROUNDS,
+        schedule=schedule,
+    )
+
+
+def _assert_results_equal(res_a, res_b):
+    assert res_a.rounds == res_b.rounds
+    for f in _FIELDS:
+        a, b = getattr(res_a, f), getattr(res_b, f)
+        if a is None or b is None:  # legacy SimResult has no arrivals column
+            continue
+        np.testing.assert_array_equal(a, b, err_msg=f)
+    assert res_a.final_accuracy == res_b.final_accuracy
+
+
+# droppeft (batched, full method incl. bandit + PTLS) and fedhetlora
+# (sequential, rank heterogeneity) cover both execution paths in the fast
+# tier; the remaining methods ride in the slow tier
+_FAST = ("droppeft", "fedhetlora")
+
+
+@pytest.mark.parametrize(
+    "method",
+    [
+        m if m in _FAST else pytest.param(m, marks=pytest.mark.slow)
+        for m in api.list_methods()
+    ],
+)
+def test_deadline_inf_is_bitwise_sync(method):
+    """deadline=inf, drop, alpha=0 == sync, for every registered method."""
+    res_sync = _run(method, "sync")
+    res_deadline = _run(method, _SYNC_AS_DEADLINE)
+    _assert_results_equal(res_sync, res_deadline)
+
+
+@pytest.mark.parametrize("method", _FAST)
+def test_sync_schedule_is_bitwise_legacy(method):
+    """schedule="sync" reproduces the frozen pre-refactor simulator exactly
+    (direct anchor; the full method sweep lives in test_method_parity)."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = LegacySimulator(
+            _CFG, _peft_cfg(method), STLDConfig(mode="cond", mean_rate=0.5, gather_bucket=1),
+            _FED, _TRAIN, strategy=method, seed=3, task=_TASK,
+        )
+    res_old = legacy.run(rounds=_ROUNDS)
+    res_new = _run(method, "sync")
+    assert res_old.rounds == res_new.rounds
+    for f in _FIELDS:
+        if not hasattr(res_old, f):
+            continue
+        np.testing.assert_array_equal(getattr(res_old, f), getattr(res_new, f), err_msg=f)
+    assert res_old.final_accuracy == res_new.final_accuracy
+
+
+@pytest.mark.slow
+def test_deadline_inf_is_bitwise_sync_gather_mode():
+    """Gather-mode STLD exercises the static-count cohort partitioning
+    through the event-driven dispatch path too."""
+    kw = dict(
+        cfg=_CFG, peft_cfg=_peft_cfg("droppeft"),
+        stld_cfg=STLDConfig(mode="gather", mean_rate=0.5, gather_bucket=1),
+        fed_cfg=_FED, train_cfg=_TRAIN, seed=5, task=_TASK, rounds=_ROUNDS,
+    )
+    res_sync = api.experiment("droppeft", schedule="sync", **kw)
+    res_deadline = api.experiment("droppeft", schedule=_SYNC_AS_DEADLINE, **kw)
+    _assert_results_equal(res_sync, res_deadline)
+
+
+def test_finite_deadline_drops_stragglers_and_speeds_the_clock():
+    """A deadline between the fastest and slowest device cuts arrivals below
+    the cohort size and advances the virtual clock by at most the deadline
+    per round."""
+    profiles = ["tx2", "nx", "agx", "tx2", "nx"]
+    kw = dict(
+        cfg=_CFG, peft_cfg=_peft_cfg("droppeft"),
+        stld_cfg=STLDConfig(mode="cond", mean_rate=0.5, gather_bucket=1),
+        fed_cfg=_FED, train_cfg=_TRAIN, seed=3, task=_TASK, rounds=_ROUNDS,
+        device_profile=profiles, cost_model=get_config("qwen3-1.7b"),
+    )
+    res_sync = api.experiment("droppeft", schedule="sync", **kw)
+    # pick a budget below the sync per-round time so tx2 stragglers miss it
+    round_times = np.diff(np.concatenate([[0.0], res_sync.cum_time_s]))
+    deadline = float(round_times.min()) * 0.5
+    res_dl = api.experiment(
+        "droppeft", schedule="deadline", deadline_s=deadline, **kw
+    )
+    assert res_dl.arrivals.min() >= 1
+    assert res_dl.arrivals.max() <= _FED.devices_per_round
+    assert (res_dl.arrivals < _FED.devices_per_round).any(), (
+        "expected at least one round to cut a straggler"
+    )
+    # each round advances by <= deadline (up to the first-arrival guarantee)
+    dl_rounds = np.diff(np.concatenate([[0.0], res_dl.cum_time_s]))
+    assert res_dl.cum_time_s[-1] < res_sync.cum_time_s[-1]
+    assert (dl_rounds <= max(deadline, dl_rounds.min()) + 1e-9).all()
+
+
+def test_async_buffer_aggregates_k_and_discounts_staleness():
+    """FedBuff semantics: every row aggregates exactly K arrivals, the
+    virtual clock is non-decreasing, and sub-cohort buffers close faster
+    than the barrier."""
+    profiles = ["tx2", "nx", "agx", "tx2", "nx"]
+    kw = dict(
+        cfg=_CFG, peft_cfg=_peft_cfg("droppeft"),
+        stld_cfg=STLDConfig(mode="cond", mean_rate=0.5, gather_bucket=1),
+        fed_cfg=_FED, train_cfg=_TRAIN, seed=3, task=_TASK, rounds=_ROUNDS,
+        device_profile=profiles, cost_model=get_config("qwen3-1.7b"),
+    )
+    res_sync = api.experiment("droppeft", schedule="sync", **kw)
+    res_async = api.experiment(
+        "droppeft", schedule="async-buffer", buffer_size=2, staleness_alpha=0.5, **kw
+    )
+    assert (res_async.arrivals == 2).all()
+    assert (np.diff(res_async.cum_time_s) >= 0).all()
+    assert res_async.cum_time_s[-1] < res_sync.cum_time_s[-1]
+
+
+def test_checkpointing_refused_for_in_flight_policies(tmp_path):
+    with pytest.raises(ValueError, match="checkpoint"):
+        api.build(
+            "droppeft", cfg=_CFG, peft_cfg=_peft_cfg("droppeft"),
+            fed_cfg=_FED, train_cfg=_TRAIN, task=_TASK,
+            schedule="async-buffer", checkpoint_dir=str(tmp_path),
+        )

@@ -1,0 +1,297 @@
+"""Virtual-clock scheduler unit + determinism contract.
+
+Event orderings must be a pure function of (seed, profiles, policy):
+identical across repeated runs and across ``cohort_mode="batched"`` /
+``"sequential"`` execution — the event heap is keyed ``(finish_time,
+device_id)``, never dict order, and completion times come from the
+deterministic ``SystemModel``, not host wall-clock.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs import FederatedConfig, PEFTConfig, STLDConfig, TrainConfig, get_config
+from repro.data import make_task
+from repro.federated.scheduler import (
+    ScheduleConfig,
+    feasible_rate_floor,
+    resolve_schedule,
+)
+from repro.federated.system_model import SystemModel
+
+_CFG = get_config("qwen3-1.7b", smoke=True).replace(
+    num_layers=4, d_model=32, d_ff=64, num_heads=2, num_kv_heads=2,
+    vocab_size=128, dtype="float32",
+)
+_FED = FederatedConfig(num_devices=6, devices_per_round=4, local_steps=2, batch_size=8)
+_TRAIN = TrainConfig(learning_rate=5e-3, total_steps=100, warmup_steps=2)
+_TASK = make_task(num_examples=256, vocab_size=128, seed=0)
+_PROFILES = ["tx2", "nx", "agx", "tx2", "nx", "agx"]
+_ROUNDS = 3
+
+
+def _runner(schedule, *, cohort_mode="batched", seed=3, method="droppeft"):
+    return api.build(
+        method,
+        cfg=_CFG,
+        peft_cfg=PEFTConfig(method="lora", lora_rank=2),
+        stld_cfg=STLDConfig(mode="cond", mean_rate=0.5, gather_bucket=1),
+        fed_cfg=_FED,
+        train_cfg=_TRAIN,
+        seed=seed,
+        task=_TASK,
+        cohort_mode=cohort_mode,
+        schedule=schedule,
+        device_profile=_PROFILES,
+        cost_model=get_config("qwen3-1.7b"),
+    )
+
+
+def _log_devices(log):
+    return [(r, dev) for r, dev, _t in log]
+
+
+def _log_times(log):
+    return np.asarray([t for _r, _dev, t in log])
+
+
+@pytest.mark.parametrize(
+    "schedule",
+    [
+        "sync",
+        ScheduleConfig(policy="deadline", deadline_s=1e4, straggler="drop"),
+        ScheduleConfig(policy="deadline", deadline_s=1e4, straggler="carry",
+                       staleness_alpha=0.5),
+        ScheduleConfig(policy="async-buffer", buffer_size=2, staleness_alpha=0.5),
+    ],
+    ids=["sync", "deadline-drop", "deadline-carry", "async"],
+)
+def test_identical_seeds_identical_events(schedule):
+    """Two runs with the same seed produce identical event logs, virtual
+    clocks, and result arrays."""
+    logs, results = [], []
+    for _ in range(2):
+        runner = _runner(schedule)
+        results.append(runner.run(rounds=_ROUNDS))
+        logs.append(list(runner.scheduler.event_log))
+    assert _log_devices(logs[0]) == _log_devices(logs[1])
+    np.testing.assert_array_equal(_log_times(logs[0]), _log_times(logs[1]))
+    np.testing.assert_array_equal(results[0].cum_time_s, results[1].cum_time_s)
+    np.testing.assert_array_equal(results[0].accuracy, results[1].accuracy)
+    np.testing.assert_array_equal(results[0].arrivals, results[1].arrivals)
+
+
+@pytest.mark.parametrize(
+    "schedule",
+    [
+        "sync",
+        ScheduleConfig(policy="deadline", deadline_s=1e4, straggler="drop"),
+        ScheduleConfig(policy="async-buffer", buffer_size=2, staleness_alpha=0.5),
+    ],
+    ids=["sync", "deadline", "async"],
+)
+def test_batched_and_sequential_modes_order_events_identically(schedule):
+    """The event *ordering* (which device finishes when, relative to the
+    others) must not depend on the execution engine's dispatch strategy.
+    Completion times are SystemModel outputs of (profile, bandwidth draw,
+    measured active fraction); the two engine modes consume identical RNG
+    streams and produce numerically matching active fractions, so the
+    device order is exactly equal and the clocks agree to float tolerance."""
+    runner_b = _runner(schedule, cohort_mode="batched")
+    res_b = runner_b.run(rounds=_ROUNDS)
+    runner_s = _runner(schedule, cohort_mode="sequential")
+    res_s = runner_s.run(rounds=_ROUNDS)
+    assert _log_devices(runner_b.scheduler.event_log) == _log_devices(
+        runner_s.scheduler.event_log
+    )
+    np.testing.assert_allclose(
+        _log_times(runner_b.scheduler.event_log),
+        _log_times(runner_s.scheduler.event_log),
+        rtol=1e-9,
+    )
+    np.testing.assert_array_equal(res_b.arrivals, res_s.arrivals)
+    np.testing.assert_allclose(res_b.cum_time_s, res_s.cum_time_s, rtol=1e-9)
+
+
+def test_event_heap_tie_breaks_by_device_id():
+    """Equal finish times pop in device-id order (never dict/hash order)."""
+    import heapq
+
+    heap = []
+    for dev in (5, 1, 3, 2, 4):
+        heapq.heappush(heap, (1.0, dev))
+    heapq.heappush(heap, (0.5, 9))
+    popped = [heapq.heappop(heap)[1] for _ in range(len(heap))]
+    assert popped == [9, 1, 2, 3, 4, 5]
+
+
+def test_virtual_time_tracks_cum_time_in_sync():
+    runner = _runner("sync")
+    runner.run(rounds=2)
+    assert runner.state.virtual_time == runner.state.cum_time
+    assert runner.state.server_version == 2
+
+
+def test_carry_keeps_straggler_updates_in_flight():
+    """With a tight deadline and carry, cut-off updates stay in flight and
+    land later (or are still pending at the end) — never silently lost."""
+    sync_runner = _runner("sync")
+    sync = sync_runner.run(rounds=_ROUNDS)
+    round_times = np.diff(np.concatenate([[0.0], sync.cum_time_s]))
+    deadline = float(round_times.min()) * 0.5
+    runner = _runner(
+        ScheduleConfig(policy="deadline", deadline_s=deadline, straggler="carry",
+                       staleness_alpha=0.5)
+    )
+    res = runner.run(rounds=_ROUNDS)
+    assert res.arrivals.min() >= 1  # a round never closes before the first arrival
+    # same seed => the carry run's round-0 cohort is the sync run's round-0
+    # cohort (where every member arrives), so the round-0 cut set is exact
+    cohort0 = {dev for r, dev, _t in sync_runner.scheduler.event_log if r == 0}
+    on_time0 = {dev for r, dev, _t in runner.scheduler.event_log if r == 0}
+    cut0 = cohort0 - on_time0
+    assert cut0, (
+        f"a deadline of half the fastest sync round must cut at least one "
+        f"round-0 straggler on the mixed tx2/nx/agx cohort (cohort {cohort0})"
+    )
+    assert len(on_time0) == int(res.arrivals[0])
+    # carried updates are never lost: every cut device either landed in a
+    # later round or is still in flight when the run ends
+    landed_late = {
+        dev for r, dev, _t in runner.scheduler.event_log if r > 0
+    }
+    unaccounted = cut0 - landed_late - set(runner.scheduler.in_flight)
+    assert not unaccounted, f"carried updates vanished for devices {unaccounted}"
+
+
+def test_resolve_schedule_overrides():
+    cfg = resolve_schedule("deadline", deadline_s=5.0, staleness_alpha=0.25)
+    assert cfg.policy == "deadline"
+    assert cfg.deadline_s == 5.0
+    assert cfg.staleness_alpha == 0.25
+    assert resolve_schedule(None).policy == "sync"
+    base = ScheduleConfig(policy="async-buffer", buffer_size=3)
+    assert resolve_schedule(base) is base
+    assert resolve_schedule(base, buffer_size=5).buffer_size == 5
+    with pytest.raises(ValueError):
+        ScheduleConfig(policy="bogus")
+    with pytest.raises(ValueError):
+        ScheduleConfig(deadline_s=0.0)
+
+
+def test_resolve_schedule_infers_policy_and_rejects_dead_options():
+    """Options without an explicit policy infer one; options that would be
+    silently dead under sync raise instead of being ignored."""
+    assert resolve_schedule(None, deadline_s=30.0).policy == "deadline"
+    assert resolve_schedule(None, straggler="carry").policy == "deadline"
+    assert resolve_schedule(None, buffer_size=2).policy == "async-buffer"
+    with pytest.raises(ValueError, match="sync"):
+        resolve_schedule("sync", deadline_s=30.0)
+    with pytest.raises(ValueError, match="staleness_alpha"):
+        resolve_schedule(None, staleness_alpha=0.5)
+
+
+def test_staleness_weights_formula():
+    from repro.federated import server as server_lib
+
+    w = server_lib.staleness_weights(np.array([0, 1, 3]), alpha=1.0)
+    expect = np.array([1.0, 0.5, 0.25])
+    np.testing.assert_allclose(w, expect / expect.sum())
+    np.testing.assert_allclose(
+        server_lib.staleness_weights(np.array([0, 7]), alpha=0.0), [0.5, 0.5]
+    )
+
+
+def test_weighted_fedavg_matches_manual():
+    import jax.numpy as jnp
+
+    from repro.federated import server as server_lib
+
+    trees = [{"a": jnp.array([1.0, 2.0])}, {"a": jnp.array([3.0, 6.0])}]
+    out = server_lib.weighted_fedavg(trees, np.array([0.75, 0.25]))
+    np.testing.assert_allclose(out["a"], [1.5, 3.0])
+    uniform = server_lib.weighted_fedavg(trees, np.array([0.5, 0.5]))
+    np.testing.assert_allclose(uniform["a"], server_lib.fedavg(trees)["a"])
+
+
+def test_hetlora_extra_weights_compose():
+    """extra_weights (the scheduler's staleness discount) multiplies the
+    rank shares; None keeps pure rank weighting."""
+    import jax.numpy as jnp
+
+    from repro.federated import server as server_lib
+
+    def layer(val):
+        return {"attn": {"q": {"a": jnp.full((3, 2), val), "b": jnp.full((2, 3), val)}}}
+
+    c0, c1 = [layer(1.0)], [layer(3.0)]
+    out = server_lib.hetlora_aggregate(
+        [c0, c1], [2, 2], 2, extra_weights=np.array([1.0, 0.0])
+    )
+    np.testing.assert_allclose(out[0]["attn"]["q"]["a"], c0[0]["attn"]["q"]["a"])
+    out2 = server_lib.hetlora_aggregate([c0, c1], [2, 2], 2)
+    np.testing.assert_allclose(out2[0]["attn"]["q"]["a"], np.full((3, 2), 2.0))
+
+
+@pytest.mark.parametrize("method", ["fedlora", "fedhetlora"])
+def test_nonptls_methods_run_with_staleness(method):
+    """The staleness-weighted merge paths that are NOT PTLS — base.merge's
+    weighted_fedavg and hetlora_aggregate(extra_weights=...) — actually
+    execute under an alpha>0 async schedule."""
+    runner = _runner(
+        ScheduleConfig(policy="async-buffer", buffer_size=2, staleness_alpha=0.5),
+        method=method,
+        cohort_mode="auto",
+    )
+    res = runner.run(rounds=2)
+    assert len(res.accuracy) == 2
+    assert np.all(np.isfinite(res.accuracy))
+    assert np.all(np.diff(res.cum_time_s) > 0)
+
+
+def test_legacy_configure_round_signature():
+    """A pre-scheduler subclass overriding configure_round(state) still runs
+    under sync and deadline-drop (no kwargs needed) and gets an actionable
+    TypeError under policies that require size=/exclude=."""
+    from repro.federated.algorithms.base import FederatedAlgorithm
+
+    class Legacy(FederatedAlgorithm):
+        def configure_round(self, state):
+            return super().configure_round(state)
+
+    res = _runner(
+        ScheduleConfig(policy="deadline", deadline_s=1e4, straggler="drop"),
+        method=Legacy(),
+    ).run(rounds=1)
+    assert len(res.accuracy) == 1
+    with pytest.raises(TypeError, match="configure_round"):
+        _runner(
+            ScheduleConfig(policy="async-buffer", buffer_size=2),
+            method=Legacy(),
+        ).run(rounds=1)
+
+
+def test_feasible_rate_floor_monotone_in_deadline():
+    """Tighter deadlines demand more dropout; an infinite budget demands
+    none; an impossible budget caps at the max grid rate."""
+    system = SystemModel(get_config("qwen3-1.7b"), PEFTConfig(method="lora"))
+    grid = (0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9)
+    kw = dict(rate_grid=grid, batch=16, seq=128, local_steps=4)
+    profiles = ["tx2", "nx", "agx"]
+    assert feasible_rate_floor(system, profiles, math.inf, **kw) == 0.0
+    assert feasible_rate_floor(system, profiles, 1e-9, **kw) == max(grid)
+    t_full = float(
+        system.cohort_round_cost(
+            devices=["tx2"], bandwidth_mbps=40.0, batch=16, seq=128,
+            local_steps=4, peft=True, active_fraction=1.0, share_fraction=1.0,
+        ).total_time_s[0]
+    )
+    floors = [
+        feasible_rate_floor(system, profiles, d, **kw)
+        for d in (t_full * 2, t_full * 0.7, t_full * 0.4)
+    ]
+    assert floors[0] == 0.0
+    assert floors == sorted(floors), f"floor must tighten with the deadline: {floors}"
+    assert floors[-1] > 0.0

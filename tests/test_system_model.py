@@ -1,0 +1,155 @@
+"""SystemModel golden values + monotonicity (paper §3.2 / §6.1, Table 2).
+
+The golden tests recompute one tx2 and one agx ``RoundCost`` and a
+``MemoryBreakdown`` by hand — explicit arithmetic from the paper's formulas
+on a config small enough to audit — so a regression in any accounting term
+(FLOPs/token, activation bytes, comm bytes, energy split) fails with a
+number, not a vibe.  The property tests pin the STLD contract the
+scheduler's deadline policy relies on: cost strictly decreasing in the
+dropout fraction rho, and the paper-scale memory footprint fitting each
+Jetson tier at its chosen ratio.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import ModelConfig, PEFTConfig, get_config
+from repro.federated.system_model import (
+    DEVICE_PROFILES,
+    SystemModel,
+    sample_bandwidth,
+)
+
+# small, fully-auditable dense config
+_CFG = ModelConfig(
+    name="golden", family="dense", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=1000,
+    activation="silu", tie_embeddings=False,
+)
+_PEFT = PEFTConfig(method="lora", lora_rank=4, lora_targets=("q", "v"))
+
+# ---- hand-derived constants for _CFG (see param_counts) -------------------
+# head_dim = 64/4 = 16
+# attn  = d*(h*hd) + 2*d*(kv*hd) + (h*hd)*d = 4096 + 4096 + 4096 = 12288
+# mlp   = 3*d*ff = 24576 ;  norms = 2*d = 128
+# layer = 36992 ; 2 layers = 73984
+# emb   = vocab*d = 64000 ; total += emb + d + emb (untied) = 128064
+_TOTAL = 202_048
+_EMB = 64_000
+_LAYER_PARAMS = _TOTAL - _EMB          # active == total for a dense model
+# LoRA rank 4 on (q, v): q -> r*(d + h*hd) = 512 ; v -> r*(d + kv*hd) = 384
+_PEFT_PARAMS = (512 + 384) * 2         # 1792
+
+
+def test_peft_param_count_hand_computed():
+    sm = SystemModel(_CFG, _PEFT)
+    assert sm.peft_params == _PEFT_PARAMS
+    assert sm.total_params == _TOTAL
+    assert sm.active_params == _TOTAL
+
+
+def _expected_round_cost(profile, *, batch, seq, local_steps, bw, af, sf):
+    """Independent arithmetic: the paper's accounting, written out."""
+    prof = DEVICE_PROFILES[profile]
+    tokens = batch * seq * local_steps
+    fwd = 2 * (_LAYER_PARAMS * af + _EMB)
+    bwd = fwd + 6 * _PEFT_PARAMS * af           # PEFT backward (frozen base)
+    compute_time = tokens * (fwd + bwd) / prof.flops
+    comm_bytes = _PEFT_PARAMS * sf * 4 + _PEFT_PARAMS * 4   # fp32 up + down
+    comm_time = comm_bytes * 8 / (bw * 1e6)
+    energy = prof.compute_watts * compute_time + prof.radio_watts * comm_time
+    traffic_mb = comm_bytes / 1024.0**2
+    gb = 1024.0**3
+    act_per_tok = (20 * 64 + 4 * 128) * 2 * 2 * af + 2 * 64 * 2  # 2 layers + final norm
+    memory = (
+        _TOTAL * 2 / gb                          # bf16 params
+        + act_per_tok * batch * seq / gb         # stored activations
+        + _PEFT_PARAMS * af * 4 / gb             # fp32 grads
+        + _PEFT_PARAMS * af * 8 / gb             # fp32 AdamW m+v
+    )
+    return compute_time, comm_time, memory, energy, traffic_mb
+
+
+@pytest.mark.parametrize("profile,af,sf", [("tx2", 1.0, 1.0), ("agx", 0.5, 0.25)])
+def test_round_cost_golden(profile, af, sf):
+    sm = SystemModel(_CFG, _PEFT)
+    got = sm.round_cost(
+        device=profile, bandwidth_mbps=40.0, batch=2, seq=16, local_steps=2,
+        peft=True, active_fraction=af, share_fraction=sf,
+    )
+    ct, mt, mem, en, tr = _expected_round_cost(
+        profile, batch=2, seq=16, local_steps=2, bw=40.0, af=af, sf=sf
+    )
+    assert got.compute_time_s == pytest.approx(ct, rel=1e-12)
+    assert got.comm_time_s == pytest.approx(mt, rel=1e-12)
+    assert got.memory_gb == pytest.approx(mem, rel=1e-12)
+    assert got.energy_j == pytest.approx(en, rel=1e-12)
+    assert got.traffic_mb == pytest.approx(tr, rel=1e-12)
+    assert got.total_time_s == pytest.approx(ct + mt, rel=1e-12)
+
+
+def test_memory_breakdown_golden_tx2_config():
+    """Field-by-field MemoryBreakdown audit at tx2-style settings."""
+    sm = SystemModel(_CFG, _PEFT)
+    mb = sm.memory_breakdown(batch=2, seq=16, peft=True, active_fraction=0.5)
+    gb = 1024.0**3
+    assert mb.params_gb == pytest.approx(_TOTAL * 2 / gb, rel=1e-12)
+    assert mb.activations_gb == pytest.approx(
+        ((20 * 64 + 4 * 128) * 2 * 2 * 0.5 + 256) * 32 / gb, rel=1e-12
+    )
+    assert mb.gradients_gb == pytest.approx(_PEFT_PARAMS * 0.5 * 4 / gb, rel=1e-12)
+    assert mb.optimizer_gb == pytest.approx(_PEFT_PARAMS * 0.5 * 8 / gb, rel=1e-12)
+    assert mb.total_gb == pytest.approx(
+        mb.params_gb + mb.activations_gb + mb.gradients_gb + mb.optimizer_gb
+    )
+
+
+def test_cost_strictly_decreasing_in_dropout_fraction():
+    """More dropout -> strictly less compute time, energy and memory at the
+    paper scale, for every device tier (comm is rho-independent; PTLS's
+    share fraction handles that axis)."""
+    sm = SystemModel(get_config("qwen3-1.7b"), PEFTConfig(method="lora"))
+    rhos = np.linspace(0.0, 0.9, 10)
+    for profile in DEVICE_PROFILES:
+        costs = [
+            sm.round_cost(
+                device=profile, bandwidth_mbps=40.0, batch=16, seq=128,
+                local_steps=4, peft=True, active_fraction=1.0 - rho,
+                share_fraction=1.0,
+            )
+            for rho in rhos
+        ]
+        compute = np.array([c.compute_time_s for c in costs])
+        total = np.array([c.total_time_s for c in costs])
+        energy = np.array([c.energy_j for c in costs])
+        memory = np.array([c.memory_gb for c in costs])
+        assert (np.diff(compute) < 0).all(), profile
+        assert (np.diff(total) < 0).all(), profile
+        assert (np.diff(energy) < 0).all(), profile
+        assert (np.diff(memory) < 0).all(), profile
+        comm = np.array([c.comm_time_s for c in costs])
+        np.testing.assert_allclose(comm, comm[0])
+
+
+def test_paper_ratios_fit_device_memory_caps():
+    """At the paper's chosen dropout ratios the 1.7B PEFT footprint fits
+    each Jetson tier's RAM (Table 2): tx2 8GB needs aggressive dropout,
+    agx 32GB fits even the full depth."""
+    sm = SystemModel(get_config("qwen3-1.7b"), PEFTConfig(method="lora"))
+    chosen = {"tx2": 0.8, "nx": 0.5, "agx": 0.0}   # rho per tier
+    for profile, rho in chosen.items():
+        mb = sm.memory_breakdown(
+            batch=16, seq=128, peft=True, active_fraction=1.0 - rho
+        )
+        cap = DEVICE_PROFILES[profile].memory_gb
+        assert mb.total_gb < cap, (
+            f"{profile}: {mb.total_gb:.2f}GB exceeds the {cap}GB cap at rho={rho}"
+        )
+    # and the converse sanity: tx2 cannot hold the full-depth footprint
+    full = sm.memory_breakdown(batch=16, seq=128, peft=True, active_fraction=1.0)
+    assert full.total_gb > DEVICE_PROFILES["tx2"].memory_gb
+
+
+def test_bandwidth_sampler_bounds():
+    rng = np.random.default_rng(0)
+    draws = np.array([sample_bandwidth(rng) for _ in range(1000)])
+    assert draws.min() >= 1.0 and draws.max() <= 100.0
