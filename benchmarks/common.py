@@ -3,9 +3,8 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
-from repro.configs import FederatedConfig, PEFTConfig, STLDConfig, TrainConfig, get_config
+from repro.configs import FederatedConfig, PEFTConfig, TrainConfig, get_config
 
 # the smoke model every simulation benchmark trains (CPU-sized), and the
 # full-size config used for system-model cost accounting (paper scale)

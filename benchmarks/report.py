@@ -4,11 +4,9 @@
 """
 from __future__ import annotations
 
-import json
-import sys
 from collections import defaultdict
 
-from benchmarks.roofline import load_records, markdown_table, roofline_row
+from benchmarks.roofline import load_records, roofline_row
 
 
 def dryrun_table() -> str:

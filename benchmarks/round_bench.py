@@ -36,7 +36,6 @@ from benchmarks.common import emit, sim_model_cfg, train_cfg
 from repro.configs import PEFTConfig, STLDConfig
 from repro.core import peft as peft_lib
 from repro.federated.client import make_client_fns
-from repro.models import stacking
 from repro.models.registry import init_params
 
 _DEVICES = 8

@@ -1,0 +1,45 @@
+"""JAX-aware static analysis: jaxpr contracts, AST lint, recompile guard.
+
+Run everything over the registered algorithms with::
+
+    PYTHONPATH=src python -m repro.analysis
+
+See ``python -m repro.analysis --help`` for pass selection, the negative
+fixtures (``--fixture RULE`` / ``--self-test``), and rule listing.
+"""
+from repro.analysis.jaxpr_contracts import (
+    CONTRACT_RULES,
+    ProgramTrace,
+    ScalingCurve,
+    check_algorithms,
+    estimate_flops,
+    stacking_concats,
+    walk_eqns,
+)
+from repro.analysis.lint_jax import LINT_RULES, lint_paths, lint_source
+from repro.analysis.recompile_guard import (
+    CompilationCounter,
+    RecompileBudgetExceeded,
+    check_experiment_recompiles,
+    recompile_guard,
+)
+from repro.analysis.report import Violation, render_report
+
+__all__ = [
+    "CONTRACT_RULES",
+    "LINT_RULES",
+    "CompilationCounter",
+    "ProgramTrace",
+    "RecompileBudgetExceeded",
+    "ScalingCurve",
+    "Violation",
+    "check_algorithms",
+    "check_experiment_recompiles",
+    "estimate_flops",
+    "lint_paths",
+    "lint_source",
+    "recompile_guard",
+    "render_report",
+    "stacking_concats",
+    "walk_eqns",
+]

@@ -1,0 +1,138 @@
+"""CLI driver: run every analysis pass, exit nonzero on violations.
+
+    PYTHONPATH=src python -m repro.analysis              # lint + contracts + recompile(sync)
+    PYTHONPATH=src python -m repro.analysis --full       # recompile across all schedule policies
+    PYTHONPATH=src python -m repro.analysis --self-test  # every negative fixture must be caught
+    PYTHONPATH=src python -m repro.analysis --fixture restack   # nonzero iff the rule fires
+    PYTHONPATH=src python -m repro.analysis --list       # rule catalog + allowlist
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _progress(label: str) -> None:
+    print(f"  .. {label}", flush=True)
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr contracts + JAX-hazard lint + recompilation guard",
+    )
+    parser.add_argument("--skip-lint", action="store_true")
+    parser.add_argument("--skip-contracts", action="store_true")
+    parser.add_argument("--skip-recompile", action="store_true")
+    parser.add_argument(
+        "--full", action="store_true",
+        help="recompile check under every schedule policy (default: sync only)",
+    )
+    parser.add_argument(
+        "--algorithms", nargs="*", default=None,
+        help="restrict the contract pass to these registered methods",
+    )
+    parser.add_argument(
+        "--paths", nargs="*", default=None,
+        help="lint these paths instead of the default (src)",
+    )
+    parser.add_argument(
+        "--fixture", metavar="RULE",
+        help="run one negative fixture; exit 1 when the analyzer catches it "
+        "(expected), 2 when it does not (an analyzer bug)",
+    )
+    parser.add_argument(
+        "--self-test", action="store_true",
+        help="run every negative fixture; exit 0 iff all are caught",
+    )
+    parser.add_argument(
+        "--list", action="store_true", help="list rules and allowlist entries"
+    )
+    args = parser.parse_args(argv)
+
+    from repro.analysis import jaxpr_contracts, lint_jax
+    from repro.analysis.report import render_report
+
+    if args.list:
+        print("== lint rules ==")
+        for rule in lint_jax.LINT_RULES.values():
+            print(f"  {rule.id}  {rule.name}: {rule.description}")
+        print("== contract rules ==")
+        for crule in jaxpr_contracts.CONTRACT_RULES.values():
+            print(f"  {crule.rule_id}: {crule.description}")
+        print("  recompile: steady-state runs must not compile new programs")
+        print("== contract allowlist ==")
+        entries = [
+            (rule_id, where, why)
+            for rule_id, m in jaxpr_contracts.ALLOWLIST.items()
+            for where, why in m.items()
+        ]
+        for rule_id, where, why in entries or []:
+            print(f"  {rule_id} @ {where}: {why}")
+        if not entries:
+            print("  (empty)")
+        return 0
+
+    if args.fixture or args.self_test:
+        from repro.analysis import fixtures
+
+        if args.self_test:
+            results = fixtures.self_test()
+            width = max(len(r) for r in results)
+            for rule_id, caught in results.items():
+                print(f"  {rule_id:{width}s}  {'caught' if caught else 'MISSED'}")
+            missed = [r for r, ok in results.items() if not ok]
+            if missed:
+                print(f"self-test FAILED: fixtures not caught: {missed}")
+                return 2
+            print(f"self-test OK: all {len(results)} fixtures caught")
+            return 0
+        try:
+            found = fixtures.run_fixture(args.fixture)
+        except KeyError:
+            print(f"unknown fixture {args.fixture!r}; one of "
+                  f"{sorted(fixtures.FIXTURES)}")
+            return 2
+        print(render_report(found, title=f"fixture {args.fixture}"))
+        if any(v.rule == args.fixture for v in found):
+            return 1  # the analyzer caught the planted bug: expected
+        print(f"fixture {args.fixture!r} NOT caught — analyzer regression")
+        return 2
+
+    failed = False
+    t0 = time.time()
+
+    if not args.skip_lint:
+        violations = lint_jax.lint_paths(
+            tuple(args.paths) if args.paths else lint_jax.DEFAULT_PATHS
+        )
+        print(render_report(violations, title="lint"))
+        failed |= bool(violations)
+
+    if not args.skip_contracts:
+        print("jaxpr contracts:", flush=True)
+        violations = jaxpr_contracts.check_algorithms(
+            args.algorithms, progress=_progress
+        )
+        print(render_report(violations, title="jaxpr contracts"))
+        failed |= bool(violations)
+
+    if not args.skip_recompile:
+        from repro.analysis.recompile_guard import check_experiment_recompiles
+
+        policies = ("sync", "deadline", "async-buffer") if args.full else ("sync",)
+        print("recompile guard:", flush=True)
+        violations = check_experiment_recompiles(
+            policies=policies, progress=_progress
+        )
+        print(render_report(violations, title="recompile guard"))
+        failed |= bool(violations)
+
+    status = "FAILED" if failed else "OK"
+    print(f"analysis {status} in {time.time() - t0:.1f}s")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,570 @@
+"""AST lint for JAX hazards, tuned to this repo's idioms.
+
+The runtime test tiers prove numerical parity; this pass catches the class
+of bug that parity tests structurally cannot — code that is *correct* but
+silently slow (per-element host syncs), *correct today* but fragile (a PRNG
+key consumed twice, a static argname that no longer matches the signature),
+or wrong only under conditions CI never hits (an environment query baked
+into a traced program at trace time).
+
+Rules
+-----
+
+=======  ====================  ==============================================
+id       name                  flags
+=======  ====================  ==============================================
+JXH001   prng-key-reuse        the same key variable consumed by two or more
+                               ``jax.random`` sampling calls without a
+                               ``split``/``fold_in`` between them
+JXH002   host-sync-loop        ``float()``/``int()``/``bool()`` of a
+                               subscripted value, or ``.item()``, inside a
+                               Python loop or comprehension — one host
+                               transfer per element when the value is a
+                               device array
+JXH003   static-argnames       ``static_argnames`` naming a parameter the
+                               jitted function does not have, or a jitted
+                               function with a bool/str-default parameter
+                               (almost always meant to be static) not listed
+                               in ``static_argnames``
+JXH004   mutable-default       mutable default argument values
+JXH005   env-query-in-jit      ``jax.devices()`` / ``jax.default_backend()``
+                               (directly or through a module-local helper)
+                               inside a jit-decorated function — the answer
+                               is baked into the cached program at trace time
+                               and is NOT part of the compilation cache key
+PYL001   unused-import         module-level import never referenced
+                               (``__init__.py`` re-export files are exempt)
+PYL002   shadowed-builtin      a parameter or assignment shadowing a python
+                               builtin
+=======  ====================  ==============================================
+
+Suppression: append ``# repro-lint: disable=RULE[,RULE...]`` to the flagged
+line (``disable=all`` silences every rule there).  Always pair a suppression
+with a justification comment — the analyzer treats an unexplained suppression
+as reviewer-hostile, even though it cannot reject it.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.report import Violation
+
+# files scanned by default (relative to the repo root)
+DEFAULT_PATHS: Tuple[str, ...] = ("src",)
+# frozen-verbatim legacy anchors are exempt from every rule
+DEFAULT_EXCLUDE: Tuple[str, ...] = ("_legacy_simulator.py",)
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,\s]+)")
+
+# jax.random callables that *derive* keys rather than consuming entropy
+_KEY_DERIVERS = {"split", "fold_in", "PRNGKey", "key", "clone", "key_data", "wrap_key_data"}
+# module paths recognized as jax.random
+_RANDOM_PREFIXES = {("jax", "random"), ("random",), ("jrandom",), ("jr",)}
+
+_ENV_QUERIES = {
+    ("jax", "devices"),
+    ("jax", "local_devices"),
+    ("jax", "device_count"),
+    ("jax", "local_device_count"),
+    ("jax", "default_backend"),
+}
+
+_SHADOW_BUILTINS = {
+    "list", "dict", "set", "tuple", "type", "id", "input", "filter", "map",
+    "next", "format", "object", "str", "int", "float", "bool", "len", "hash",
+    "iter", "round", "slice", "compile", "eval", "open", "sum", "min", "max",
+    "all", "any", "vars", "dir", "range", "zip", "sorted", "enumerate",
+    "bytes", "print", "property",
+}
+
+
+@dataclass(frozen=True)
+class LintRule:
+    id: str
+    name: str
+    description: str
+    hint: str
+    check: Callable[["_Module"], Iterator[Violation]]
+
+
+LINT_RULES: Dict[str, LintRule] = {}
+
+
+def _register(rule_id: str, name: str, description: str, hint: str):
+    def deco(fn):
+        LINT_RULES[rule_id] = LintRule(rule_id, name, description, hint, fn)
+        return fn
+
+    return deco
+
+
+# --------------------------------------------------------------------- helpers
+class _Module:
+    """One parsed source file plus the per-line suppression table."""
+
+    def __init__(self, source: str, path: str):
+        self.tree = ast.parse(source, filename=path)
+        self.lines = source.splitlines()
+        self.path = path
+
+    def suppressed(self, node: ast.AST) -> Set[str]:
+        """Rule ids suppressed on any physical line of ``node``'s statement,
+        or on the line directly above it (comment-on-its-own-line form)."""
+        first = getattr(node, "lineno", None)
+        if first is None:
+            return set()
+        last = getattr(node, "end_lineno", first) or first
+        out: Set[str] = set()
+        for ln in range(max(first - 1, 1), last + 1):
+            if 0 < ln <= len(self.lines):
+                m = _SUPPRESS_RE.search(self.lines[ln - 1])
+                if m:
+                    out |= {t.strip() for t in m.group(1).split(",") if t.strip()}
+        return out
+
+    def violation(self, rule: str, node: ast.AST, message: str) -> Optional[Violation]:
+        sup = self.suppressed(node)
+        if rule in sup or "all" in sup:
+            return None
+        return Violation(
+            rule=rule,
+            where=f"{self.path}:{getattr(node, 'lineno', 0)}",
+            message=message,
+            hint=LINT_RULES[rule].hint if rule in LINT_RULES else "",
+        )
+
+
+def _dotted(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """``a.b.c`` -> ("a", "b", "c"); None for anything non-dotted."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _scopes(tree: ast.Module) -> Iterator[ast.AST]:
+    """The module plus every (nested) function definition."""
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _scope_nodes(scope: ast.AST) -> Iterator[ast.AST]:
+    """Walk a scope's own statements without descending into nested defs."""
+    body = scope.body if hasattr(scope, "body") else []
+    stack = list(body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            # a nested def is its own scope; class-body bindings are class
+            # attributes, which shadow nothing outside the class statement
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _assigned_names(scope: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+    for node in _scope_nodes(scope):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, (ast.Store, ast.Del)):
+            names.add(node.id)
+    return names
+
+
+def _func_params(fn: ast.AST) -> List[str]:
+    a = fn.args
+    params = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        params.append(a.vararg.arg)
+    if a.kwarg:
+        params.append(a.kwarg.arg)
+    return params
+
+
+def _is_jax_random_call(call: ast.Call) -> Optional[str]:
+    dotted = _dotted(call.func)
+    if not dotted or len(dotted) < 2:
+        return None
+    prefix, attr = tuple(dotted[:-1]), dotted[-1]
+    if prefix in _RANDOM_PREFIXES:
+        return attr
+    return None
+
+
+def _jit_decoration(fn: ast.AST) -> Optional[Tuple[bool, Optional[ast.Call]]]:
+    """(is_jitted, jit_call_node_or_None) when ``fn`` is jit-decorated.
+
+    Recognizes ``@jax.jit`` and ``@partial(jax.jit, ...)`` /
+    ``@functools.partial(jax.jit, ...)``.
+    """
+    for dec in getattr(fn, "decorator_list", []):
+        if _dotted(dec) in {("jax", "jit"), ("jit",)}:
+            return True, None
+        if isinstance(dec, ast.Call):
+            head = _dotted(dec.func)
+            if head in {("jax", "jit"), ("jit",)}:
+                return True, dec
+            if head in {("partial",), ("functools", "partial")} and dec.args:
+                if _dotted(dec.args[0]) in {("jax", "jit"), ("jit",)}:
+                    return True, dec
+    return None
+
+
+def _static_argnames_literal(call: Optional[ast.Call]) -> Optional[List[str]]:
+    """The literal static_argnames of a jit/partial call, None if absent or
+    not a literal we can read."""
+    if call is None:
+        return None
+    for kw in call.keywords:
+        if kw.arg != "static_argnames":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, str):
+            return [v.value]
+        if isinstance(v, (ast.Tuple, ast.List)):
+            names = []
+            for elt in v.elts:
+                if not (isinstance(elt, ast.Constant) and isinstance(elt.value, str)):
+                    return None
+                names.append(elt.value)
+            return names
+        return None
+    return None
+
+
+# ----------------------------------------------------------------------- rules
+@_register(
+    "JXH001",
+    "prng-key-reuse",
+    "the same PRNG key consumed by two or more jax.random sampling calls",
+    "jax.random.split the key (one subkey per consumer) before fanning out; "
+    "reusing a key makes the draws identical, not independent",
+)
+def _check_key_reuse(mod: _Module) -> Iterator[Violation]:
+    for scope in _scopes(mod.tree):
+        reassigned = _assigned_names(scope)
+        consumed: Dict[str, ast.AST] = {}
+        for node in _scope_nodes(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            sampler = _is_jax_random_call(node)
+            if sampler is None or sampler in _KEY_DERIVERS:
+                continue
+            if not node.args or not isinstance(node.args[0], ast.Name):
+                continue
+            name = node.args[0].id
+            if name in reassigned:
+                continue  # loop-carried / re-split keys track their own path
+            if name in consumed:
+                v = mod.violation(
+                    "JXH001",
+                    node,
+                    f"key {name!r} already consumed by jax.random."
+                    f"{_is_jax_random_call(consumed[name])} on line "
+                    f"{consumed[name].lineno}; this draw is correlated with it",
+                )
+                if v:
+                    yield v
+            else:
+                consumed[name] = node
+
+
+@_register(
+    "JXH002",
+    "host-sync-loop",
+    "per-element float()/int()/.item() inside a Python loop",
+    "one host transfer per element when the operand is a device array; pull "
+    "the whole array once (jax.device_get / np.asarray) or vectorize with "
+    "jnp.asarray(xs)[idx]",
+)
+def _check_host_sync_loop(mod: _Module) -> Iterator[Violation]:
+    loops = [
+        n
+        for n in ast.walk(mod.tree)
+        if isinstance(n, (ast.For, ast.While, ast.ListComp, ast.SetComp,
+                          ast.DictComp, ast.GeneratorExp))
+    ]
+    seen: Set[int] = set()
+    for loop in loops:
+        for node in ast.walk(loop):
+            if id(node) in seen or not isinstance(node, ast.Call):
+                continue
+            msg = None
+            if (
+                isinstance(node.func, ast.Name)
+                and node.func.id in ("float", "int", "bool")
+                and len(node.args) == 1
+                and isinstance(node.args[0], ast.Subscript)
+            ):
+                msg = (
+                    f"{node.func.id}() of a subscripted value inside a loop — "
+                    "a device-array operand costs one host sync per element"
+                )
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "item"
+                and not node.args
+            ):
+                msg = ".item() inside a loop — one host sync per element"
+            if msg:
+                seen.add(id(node))
+                v = mod.violation("JXH002", node, msg)
+                if v:
+                    yield v
+
+
+@_register(
+    "JXH003",
+    "static-argnames",
+    "static_argnames out of sync with the jitted function's signature",
+    "static_argnames must name actual parameters; bool/str-default "
+    "parameters of a jitted function are almost always static — list them, "
+    "or they retrace as traced values (bools) / fail to hash (objects)",
+)
+def _check_static_argnames(mod: _Module) -> Iterator[Violation]:
+    # local defs, for the jax.jit(fn_name, static_argnames=...) call form
+    local_defs = {
+        n.name: n
+        for n in ast.walk(mod.tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+
+    def check_names(call: ast.Call, fn: ast.AST) -> Iterator[Violation]:
+        names = _static_argnames_literal(call)
+        params = _func_params(fn)
+        if names:
+            for name in names:
+                if name not in params:
+                    v = mod.violation(
+                        "JXH003",
+                        call,
+                        f"static_argnames names {name!r}, which is not a "
+                        f"parameter of {fn.name!r} ({', '.join(params)})",
+                    )
+                    if v:
+                        yield v
+        listed = set(names or ())
+        for arg, default in _defaults_of(fn):
+            if arg in listed:
+                continue
+            if isinstance(default, ast.Constant) and isinstance(default.value, (bool, str)):
+                v = mod.violation(
+                    "JXH003",
+                    fn,
+                    f"jitted {fn.name!r} has parameter {arg!r} with a "
+                    f"{type(default.value).__name__} default but it is not in "
+                    "static_argnames",
+                )
+                if v:
+                    yield v
+
+    for fn in local_defs.values():
+        jit = _jit_decoration(fn)
+        if jit:
+            yield from check_names(jit[1] or ast.Call(func=ast.Name(id="jit"), args=[], keywords=[]), fn)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call) or _dotted(node.func) not in {("jax", "jit"), ("jit",)}:
+            continue
+        if node.args and isinstance(node.args[0], ast.Name):
+            fn = local_defs.get(node.args[0].id)
+            if fn is not None and _jit_decoration(fn) is None:
+                yield from check_names(node, fn)
+
+
+def _defaults_of(fn: ast.AST) -> Iterator[Tuple[str, ast.AST]]:
+    a = fn.args
+    pos = a.posonlyargs + a.args
+    for arg, default in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        yield arg.arg, default
+    for arg, default in zip(a.kwonlyargs, a.kw_defaults):
+        if default is not None:
+            yield arg.arg, default
+
+
+@_register(
+    "JXH004",
+    "mutable-default",
+    "mutable default argument value",
+    "default values are evaluated once at def time and shared across calls; "
+    "use None and create the object in the body",
+)
+def _check_mutable_default(mod: _Module) -> Iterator[Violation]:
+    for fn in ast.walk(mod.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for arg, default in _defaults_of(fn):
+            mutable = isinstance(default, (ast.List, ast.Dict, ast.Set)) or (
+                isinstance(default, ast.Call)
+                and isinstance(default.func, ast.Name)
+                and default.func.id in ("list", "dict", "set")
+            )
+            if mutable:
+                v = mod.violation(
+                    "JXH004",
+                    fn,
+                    f"{fn.name!r} has a mutable default for parameter {arg!r}",
+                )
+                if v:
+                    yield v
+
+
+@_register(
+    "JXH005",
+    "env-query-in-jit",
+    "environment query inside a jit-decorated function",
+    "jax.devices()/default_backend() evaluated during trace is baked into "
+    "the cached program but is NOT part of its cache key; resolve it outside "
+    "the jit and pass the answer through a static argument",
+)
+def _check_env_query_in_jit(mod: _Module) -> Iterator[Violation]:
+    # module-local helpers that answer an environment query
+    helper_names: Set[str] = set()
+    for fn in ast.walk(mod.tree):
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for node in _scope_nodes(fn):
+                if isinstance(node, ast.Call) and _dotted(node.func) in _ENV_QUERIES:
+                    helper_names.add(fn.name)
+                    break
+
+    for fn in ast.walk(mod.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)) or not _jit_decoration(fn):
+            continue
+        for node in ast.walk(fn):  # nested defs inside a jitted fn still trace
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func)
+            direct = dotted in _ENV_QUERIES
+            via_helper = (
+                dotted is not None and len(dotted) == 1 and dotted[0] in helper_names
+            )
+            if direct or via_helper:
+                what = ".".join(dotted)
+                v = mod.violation(
+                    "JXH005",
+                    node,
+                    f"jitted {fn.name!r} calls {what}() during trace — the "
+                    "platform answer is baked into the compiled program",
+                )
+                if v:
+                    yield v
+
+
+@_register(
+    "PYL001",
+    "unused-import",
+    "module-level import never referenced",
+    "delete it (re-exports belong in __init__.py, which this rule skips)",
+)
+def _check_unused_import(mod: _Module) -> Iterator[Violation]:
+    if os.path.basename(mod.path) == "__init__.py":
+        return
+    imported: Dict[str, ast.AST] = {}
+    for node in mod.tree.body:
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                name = alias.asname or alias.name.split(".")[0]
+                imported[name] = node
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                imported[alias.asname or alias.name] = node
+    used: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            used.add(node.id)
+        elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+            # __all__ entries and string annotations ("Algo | None") count
+            used.update(re.findall(r"\w+", node.value))
+        elif isinstance(node, ast.Attribute):
+            root = _dotted(node)
+            if root:
+                used.add(root[0])
+    for name, node in imported.items():
+        if name in used:
+            continue
+        # honor ruff/flake8-style suppression on deliberate re-exports
+        lines = mod.lines[node.lineno - 1 : (node.end_lineno or node.lineno)]
+        if any("# noqa" in ln for ln in lines):
+            continue
+        v = mod.violation("PYL001", node, f"imported name {name!r} is never used")
+        if v:
+            yield v
+
+
+@_register(
+    "PYL002",
+    "shadowed-builtin",
+    "parameter or assignment shadowing a python builtin",
+    "rename it; shadowing len/type/id/... breaks the builtin for the rest "
+    "of the scope",
+)
+def _check_shadowed_builtin(mod: _Module) -> Iterator[Violation]:
+    for fn in ast.walk(mod.tree):
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for param in _func_params(fn):
+                if param in _SHADOW_BUILTINS:
+                    v = mod.violation(
+                        "PYL002", fn, f"parameter {param!r} of {fn.name!r} shadows a builtin"
+                    )
+                    if v:
+                        yield v
+    for scope in _scopes(mod.tree):
+        for node in _scope_nodes(scope):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+                if node.id in _SHADOW_BUILTINS:
+                    v = mod.violation(
+                        "PYL002", node, f"assignment to {node.id!r} shadows a builtin"
+                    )
+                    if v:
+                        yield v
+
+
+# ------------------------------------------------------------------ public api
+def lint_source(
+    source: str, path: str = "<string>", rules: Optional[Sequence[str]] = None
+) -> List[Violation]:
+    """Run the (selected) lint rules over one source string."""
+    mod = _Module(source, path)
+    out: List[Violation] = []
+    for rule_id, rule in LINT_RULES.items():
+        if rules is not None and rule_id not in rules:
+            continue
+        out.extend(rule.check(mod))
+    return sorted(out, key=lambda v: (v.where, v.rule))
+
+
+def iter_python_files(paths: Iterable[str], exclude: Sequence[str] = DEFAULT_EXCLUDE):
+    for path in paths:
+        if os.path.isfile(path):
+            yield path
+            continue
+        for root, _dirs, files in os.walk(path):
+            for f in sorted(files):
+                if f.endswith(".py") and f not in exclude:
+                    yield os.path.join(root, f)
+
+
+def lint_paths(
+    paths: Sequence[str] = DEFAULT_PATHS,
+    *,
+    rules: Optional[Sequence[str]] = None,
+    exclude: Sequence[str] = DEFAULT_EXCLUDE,
+) -> List[Violation]:
+    """Run the lint over every ``.py`` file under ``paths``."""
+    out: List[Violation] = []
+    for path in iter_python_files(paths, exclude):
+        with open(path, "r", encoding="utf-8") as fh:
+            out.extend(lint_source(fh.read(), path, rules))
+    return out

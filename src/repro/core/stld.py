@@ -21,6 +21,17 @@ guaranteed minimum number of active layers); ``sample_active_indices`` draws a
 fixed-size active set with inclusion probabilities proportional to
 ``1 - P_l`` (Gumbel top-k weighted sampling without replacement), the
 gather-mode analogue.
+
+Key discipline
+--------------
+Every sampler here consumes its ``key`` argument *whole* (exactly one
+``jax.random`` draw per call) and never splits or folds internally.  Callers
+own the stream: the client step does ``rng, kd = jax.random.split(rng)`` per
+local step and passes ``kd`` to exactly one sampler, and the cohort engine
+fans out one ``jax.random.split(key, n + 1)`` per round so no two devices —
+and no two rounds — ever share a key path (regression-tested in
+``tests/test_key_discipline.py``).  Passing the same key to two samplers
+would correlate their gates; the JXH001 lint rule flags that pattern.
 """
 from __future__ import annotations
 

@@ -1,4 +1,12 @@
-"""Non-IID Dirichlet partitioning across federated devices (paper §6.1)."""
+"""Non-IID Dirichlet partitioning across federated devices (paper §6.1).
+
+Key discipline: partitioning is host-side and seeded, never keyed — it uses
+one ``np.random.default_rng(seed)`` Generator per call and consumes no JAX
+PRNG keys, so the device data split is a pure function of ``(labels, seed)``
+and is identical across cohort modes, schedulers, and restarts.  Keep it
+that way: threading a ``jax.random`` key through here would couple the data
+partition to the training stream and silently change every downstream draw.
+"""
 from __future__ import annotations
 
 from typing import List

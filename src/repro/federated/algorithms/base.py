@@ -24,6 +24,8 @@ from typing import Dict, List, Type
 
 import numpy as np
 
+import jax
+
 from repro.federated.state import CohortResults, RoundPlan, RoundState
 from repro.federated.system_model import sample_bandwidth
 
@@ -95,7 +97,7 @@ class FederatedAlgorithm:
             free = [d for d in range(fed.num_devices) if d not in exclude]
             n = min(want, len(free))
             cohort = [
-                int(free[i])
+                int(free[i])  # repro-lint: disable=JXH002 — 'free' is a python list
                 for i in state.rng.choice(len(free), size=n, replace=False)
             ]
         else:
@@ -170,9 +172,13 @@ class FederatedAlgorithm:
         cohort = results.plan.cohort
         n = len(cohort)
         bandwidths = np.array([sample_bandwidth(state.rng) for _ in cohort])
-        active_fracs = [
-            float(m["active_layers"]) / ctx.cfg.num_layers for m in results.metrics
-        ]
+        # one batched host pull — sequential-mode metrics are device arrays,
+        # and a per-device float() loop would sync once per member
+        active = np.asarray(
+            jax.device_get([m["active_layers"] for m in results.metrics]),
+            dtype=np.float64,
+        )
+        active_fracs = (active / ctx.cfg.num_layers).tolist()
         if results.masks is None:
             # a custom aggregate() may not fill masks in; cost accounting
             # then assumes every layer is shared
@@ -208,7 +214,14 @@ class FederatedAlgorithm:
         row = {
             "time": cum_time,
             "acc": mean_acc,
-            "loss": float(np.mean([float(m["loss"]) for m in results.metrics])),
+            "loss": float(
+                np.mean(
+                    np.asarray(
+                        jax.device_get([m["loss"] for m in results.metrics]),
+                        dtype=np.float64,
+                    )
+                )
+            ),
             "rate": float(np.mean(plan.rates)),
             "active": float(np.mean(active_fracs)),
             "traffic": float(cost.traffic_mb.sum()),

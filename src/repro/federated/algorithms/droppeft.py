@@ -97,7 +97,9 @@ class DropPEFT(FederatedAlgorithm):
         # device keeps its own layers; refresh from global (download)
         if isinstance(state.global_peft, (list, tuple)):
             return [
-                state.global_peft[l] if bool(mask[l]) else own[l]
+                state.global_peft[l]
+                if bool(mask[l])  # repro-lint: disable=JXH002 — numpy row
+                else own[l]
                 for l in range(self.ctx.cfg.num_layers)
             ]
         # stacked layout: one jit'd per-layer select, device-resident

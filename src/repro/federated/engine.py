@@ -212,7 +212,7 @@ class CohortEngine:
                 k: jnp.asarray(np.stack([batch_list[i][k] for i in pos]))
                 for k in ("tokens", "targets", "mask")
             }
-            rate_arr = jnp.asarray([float(rates[i]) for i in pos], dtype=jnp.float32)
+            rate_arr = jnp.asarray(np.asarray(rates, dtype=np.float32)[pos])
             key_arr = jnp.stack([keys[i] for i in pos])
             gstep_arr = jnp.asarray([gsteps[i] for i in pos], dtype=jnp.int32)
             val_args = (
@@ -251,9 +251,10 @@ class CohortEngine:
             # per-device float() syncs would cost hundreds of tiny dispatches
             peft_list = self._unstack_tree(peft_out, len(pos))
             metrics_np, imps_np, accs_np = jax.device_get((metrics, importances, accs))
+            accs_list = np.asarray(accs_np).tolist()
             for j, i in enumerate(pos):
                 dev_metrics = {k: v[j] for k, v in metrics_np.items()}
-                outs[i] = (peft_list[j], dev_metrics, imps_np[j], float(accs_np[j]))
+                outs[i] = (peft_list[j], dev_metrics, imps_np[j], accs_list[j])
         return outs
 
     def _stack_trees(self, trees):
@@ -301,6 +302,9 @@ class CohortEngine:
         )
         if adaopt_depth < self.cfg.num_layers:
             peft_i = self._adaopt_truncate(peft_i, start_peft, adaopt_depth)
+        # one host pull for the round's scalars; downstream per-field float()
+        # reads then touch numpy, not device buffers
+        metrics, importance = jax.device_get((metrics, importance))
 
         val = self.devices[dev].val_batch()
         acc = float(

@@ -45,6 +45,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+import jax
+
 from repro.federated import server as server_lib
 from repro.federated.state import CohortResults, RoundPlan
 from repro.federated.system_model import SystemModel
@@ -258,9 +260,9 @@ class VirtualClockScheduler:
         )
         runner.state = state
         # log arrivals in event order for the determinism suite
-        times = results.cost.total_time_s
+        times = np.asarray(results.cost.total_time_s).tolist()
         for t, dev in sorted(
-            zip((float(t) for t in times), plan.cohort), key=lambda p: (p[0], p[1])
+            zip(times, plan.cohort), key=lambda p: (p[0], p[1])
         ):
             self.event_log.append((plan.round_index, dev, t0 + t))
         return row
@@ -302,28 +304,37 @@ class VirtualClockScheduler:
         results.masks = algo.compute_masks(state, results)
         cost, active_fracs = algo.round_cost(state, results)
         t0 = state.virtual_time
+        # pull each cost vector to python floats once; per-field float(x[i])
+        # reads inside the job loop would cost one conversion per element
+        rates = [float(r) for r in plan.rates]
+        total_s = np.asarray(cost.total_time_s).tolist()
+        compute_s = np.asarray(cost.compute_time_s).tolist()
+        comm_s = np.asarray(cost.comm_time_s).tolist()
+        energy_j = np.asarray(cost.energy_j).tolist()
+        traffic_mb = np.asarray(cost.traffic_mb).tolist()
+        memory_gb = np.asarray(cost.memory_gb).tolist()
         jobs = []
         for i, dev in enumerate(plan.cohort):
             job = _Job(
                 dev=dev,
-                rate=float(plan.rates[i]),
+                rate=rates[i],
                 version=state.server_version,
                 dispatch_round=plan.round_index,
                 cohort_pos=i,
                 dispatch_time=t0,
-                duration=float(cost.total_time_s[i]),
-                finish=t0 + float(cost.total_time_s[i]),
+                duration=total_s[i],
+                finish=t0 + total_s[i],
                 peft=results.pefts[i],
                 metrics=results.metrics[i],
                 importance=results.importances[i],
                 accuracy=results.accuracies[i],
                 active_frac=active_fracs[i],
                 mask=np.asarray(results.masks[i]),
-                compute_s=float(cost.compute_time_s[i]),
-                comm_s=float(cost.comm_time_s[i]),
-                energy_j=float(cost.energy_j[i]),
-                traffic_mb=float(cost.traffic_mb[i]),
-                memory_gb=float(cost.memory_gb[i]),
+                compute_s=compute_s[i],
+                comm_s=comm_s[i],
+                energy_j=energy_j[i],
+                traffic_mb=traffic_mb[i],
+                memory_gb=memory_gb[i],
             )
             jobs.append(job)
             self._jobs[dev] = job
@@ -549,7 +560,14 @@ class VirtualClockScheduler:
 
         if arrived:
             acc = float(np.mean([j.accuracy for j in arrived]))
-            loss = float(np.mean([float(j.metrics["loss"]) for j in arrived]))
+            loss = float(
+                np.mean(
+                    np.asarray(
+                        jax.device_get([j.metrics["loss"] for j in arrived]),
+                        dtype=np.float64,
+                    )
+                )
+            )
         else:  # nothing incorporated: carry the previous row's curve values
             hist = self.runner.state.history
             acc = float(hist[-1]["acc"]) if hist else 0.0

@@ -21,7 +21,7 @@ baseline) and produces bit-identical results.
 from __future__ import annotations
 
 from functools import partial
-from typing import List, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ scales upload traffic by the shared-layer fraction (paper §4).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 

@@ -3,6 +3,12 @@
 ``impl='pallas'`` runs the kernels (interpret mode on CPU, native on TPU);
 ``impl='xla'`` dispatches to the pure-jnp reference path — the default for
 dry-run lowering since Pallas does not lower to the XLA CPU backend.
+
+The public functions resolve the backend question (``interpret`` =
+running-on-CPU) *outside* the traced region and pass the answer through a
+static argument of the inner jitted program.  Querying ``jax.devices()``
+during trace would bake the platform into the compiled program without
+making it part of the cache key — a stale answer after a backend switch.
 """
 from __future__ import annotations
 
@@ -22,7 +28,24 @@ def _is_cpu() -> bool:
     return jax.devices()[0].platform == "cpu"
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "impl", "block_q", "block_k"))
+@partial(
+    jax.jit,
+    static_argnames=("causal", "window", "impl", "block_q", "block_k", "interpret"),
+)
+def _flash_attention(q, k, v, *, causal, window, impl, block_q, block_k, interpret):
+    h, kv = q.shape[1], k.shape[1]
+    if kv != h:
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if impl == "xla":
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+
+
 def flash_attention(
     q,
     k,
@@ -35,28 +58,25 @@ def flash_attention(
     block_k: int = 128,
 ):
     """q: (B, H, S, D); k, v: (B, KV, S, D) — GQA broadcast handled here."""
-    h, kv = q.shape[1], k.shape[1]
-    if kv != h:
-        rep = h // kv
-        k = jnp.repeat(k, rep, axis=1)
-        v = jnp.repeat(v, rep, axis=1)
-    if impl == "xla":
-        return ref.attention_ref(q, k, v, causal=causal, window=window)
-    return flash_attention_pallas(
-        q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k,
-        interpret=_is_cpu(),
+    return _flash_attention(
+        q, k, v, causal=causal, window=window, impl=impl,
+        block_q=block_q, block_k=block_k, interpret=_is_cpu(),
     )
 
 
-@partial(jax.jit, static_argnames=("impl", "chunk"))
-def wkv6(r, k, v, logw, u, *, impl: str = "pallas", chunk: int = 16):
+@partial(jax.jit, static_argnames=("impl", "chunk", "interpret"))
+def _wkv6(r, k, v, logw, u, *, impl, chunk, interpret):
     if impl == "xla":
         return ref.wkv6_ref(r, k, v, logw, u)
-    return wkv6_pallas(r, k, v, logw, u, chunk=chunk, interpret=_is_cpu())
+    return wkv6_pallas(r, k, v, logw, u, chunk=chunk, interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("impl", "chunk", "d_block"))
-def mamba_scan(dt, x, bmat, cmat, a, dvec, *, impl: str = "pallas", chunk: int = 64, d_block: int = 256):
+def wkv6(r, k, v, logw, u, *, impl: str = "pallas", chunk: int = 16):
+    return _wkv6(r, k, v, logw, u, impl=impl, chunk=chunk, interpret=_is_cpu())
+
+
+@partial(jax.jit, static_argnames=("impl", "chunk", "d_block", "interpret"))
+def _mamba_scan(dt, x, bmat, cmat, a, dvec, *, impl, chunk, d_block, interpret):
     if impl == "xla":
         return ref.mamba_scan_ref(dt, x, bmat, cmat, a, dvec)
     d = x.shape[-1]
@@ -64,14 +84,30 @@ def mamba_scan(dt, x, bmat, cmat, a, dvec, *, impl: str = "pallas", chunk: int =
     while d % d_block:
         d_block //= 2
     return mamba_scan_pallas(
-        dt, x, bmat, cmat, a, dvec, chunk=chunk, d_block=max(1, d_block), interpret=_is_cpu()
+        dt, x, bmat, cmat, a, dvec, chunk=chunk, d_block=max(1, d_block),
+        interpret=interpret,
     )
 
 
-@partial(jax.jit, static_argnames=("alpha", "impl", "block_m", "block_n"))
-def lora_matmul(x, w, a, b, *, alpha: float = 1.0, impl: str = "pallas", block_m: int = 128, block_n: int = 128):
+def mamba_scan(dt, x, bmat, cmat, a, dvec, *, impl: str = "pallas", chunk: int = 64, d_block: int = 256):
+    return _mamba_scan(
+        dt, x, bmat, cmat, a, dvec, impl=impl, chunk=chunk, d_block=d_block,
+        interpret=_is_cpu(),
+    )
+
+
+@partial(jax.jit, static_argnames=("alpha", "impl", "block_m", "block_n", "interpret"))
+def _lora_matmul(x, w, a, b, *, alpha, impl, block_m, block_n, interpret):
     if impl == "xla":
         return ref.lora_matmul_ref(x, w, a, b, alpha=alpha)
     return lora_matmul_pallas(
-        x, w, a, b, alpha=alpha, block_m=block_m, block_n=block_n, interpret=_is_cpu()
+        x, w, a, b, alpha=alpha, block_m=block_m, block_n=block_n,
+        interpret=interpret,
+    )
+
+
+def lora_matmul(x, w, a, b, *, alpha: float = 1.0, impl: str = "pallas", block_m: int = 128, block_n: int = 128):
+    return _lora_matmul(
+        x, w, a, b, alpha=alpha, impl=impl, block_m=block_m, block_n=block_n,
+        interpret=_is_cpu(),
     )

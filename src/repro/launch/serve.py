@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.configs import ARCH_IDS, PEFTConfig, get_config
 from repro.core import peft as peft_lib
 from repro.launch.steps import make_prefill_step, make_serve_step
-from repro.models.registry import default_stack_mode, init_params
+from repro.models.registry import init_params
 from repro.models.transformer import init_caches
 from repro.serving.decode import generate
 

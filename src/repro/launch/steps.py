@@ -9,9 +9,6 @@ and lowered by the multi-pod dry-run.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

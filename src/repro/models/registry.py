@@ -17,8 +17,6 @@ heterogeneous/hetlora and dry-run ``unroll`` paths.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 from repro.models import encdec, transformer
 from repro.models.stacking import (  # noqa: F401  (public converter API)
     is_stacked,

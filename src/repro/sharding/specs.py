@@ -15,8 +15,6 @@ Conventions:
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 

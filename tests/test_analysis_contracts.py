@@ -1,0 +1,103 @@
+"""jaxpr contract engine: estimator correctness, negative fixtures, and the
+shipped-algorithm invariant (droppeft passes every contract at smoke scale).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import fixtures, jaxpr_contracts as contracts
+
+_CONTRACT_FIXTURES = sorted(
+    r for r in fixtures.FIXTURES if not r.startswith(("JXH", "PYL"))
+)
+
+
+# ---------------------------------------------------------- FLOP estimator
+def test_estimate_flops_counts_dot_general():
+    """dot_general = 2 · |out| · contraction_size."""
+    a = jnp.zeros((8, 16), jnp.float32)
+    b = jnp.zeros((16, 4), jnp.float32)
+    closed = jax.make_jaxpr(lambda a, b: a @ b)(a, b)
+    assert contracts.estimate_flops(closed) == pytest.approx(2 * 8 * 4 * 16)
+
+
+def test_estimate_flops_multiplies_scan_length():
+    """The whole point of the custom estimator: XLA's cost_analysis counts a
+    scan body once; ours multiplies by the trip count."""
+    w = jnp.zeros((4, 8), jnp.float32)
+
+    def body(h, w_row):
+        return h * w_row, None
+
+    def run(h, w):
+        h, _ = jax.lax.scan(body, h, w)
+        return h
+
+    h = jnp.zeros((8,), jnp.float32)
+    one_step = contracts.estimate_flops(jax.make_jaxpr(lambda h, r: h * r)(h, w[0]))
+    scanned = contracts.estimate_flops(jax.make_jaxpr(run)(h, w))
+    assert scanned == pytest.approx(4 * one_step)
+
+
+def test_estimate_flops_takes_max_over_cond_branches():
+    x = jnp.zeros((8, 8), jnp.float32)
+
+    def f(pred, x):
+        return jax.lax.cond(pred, lambda v: v @ v, lambda v: v + 1.0, x)
+
+    closed = jax.make_jaxpr(f)(True, x)
+    dot = contracts.estimate_flops(jax.make_jaxpr(lambda v: v @ v)(x))
+    assert contracts.estimate_flops(closed) >= dot
+
+
+def test_linearity_fit():
+    slope, resid = contracts._linearity((1.0, 2.0, 4.0), (3.0, 6.0, 12.0))
+    assert slope == pytest.approx(3.0) and resid == pytest.approx(0.0)
+    slope, resid = contracts._linearity((1.0, 2.0, 4.0), (5.0, 5.0, 5.0))
+    assert slope == pytest.approx(0.0)
+
+
+# ------------------------------------------------------------ walker reuse
+def test_walk_eqns_descends_scan_and_accepts_closed_jaxpr():
+    w = jnp.zeros((3, 4), jnp.float32)
+
+    def run(h, w):
+        h, _ = jax.lax.scan(lambda c, r: (jnp.tanh(c + r), None), h, w)
+        return h
+
+    closed = jax.make_jaxpr(run)(jnp.zeros((4,), jnp.float32), w)
+    prims = {e.primitive.name for e in contracts.walk_eqns(closed)}
+    assert "scan" in prims and "tanh" in prims  # outer eqn AND its body
+
+
+# --------------------------------------------------------- negative fixtures
+@pytest.mark.parametrize("rule_id", _CONTRACT_FIXTURES)
+def test_contract_fixture_caught(rule_id):
+    found = fixtures.run_fixture(rule_id)
+    assert any(v.rule == rule_id for v in found), f"{rule_id} fixture missed"
+
+
+def test_self_test_all_caught():
+    assert all(fixtures.self_test().values())
+
+
+# ---------------------------------------------------- shipped-code invariant
+def test_droppeft_passes_all_contracts():
+    """The paper's method passes every contract — structural rules, leaf
+    budget, and cost-scaling linearity in the STLD active fraction."""
+    violations = contracts.check_algorithms(["droppeft"], include_decode=False)
+    assert violations == [], "\n".join(v.render() for v in violations)
+
+
+def test_client_scaling_curve_is_linear():
+    curve = contracts.client_scaling_curve("lora", 2)
+    assert contracts.check_curve(curve) == []
+    # and strictly increasing in the active fraction
+    assert curve.flops[0] < curve.flops[1] < curve.flops[2]
+    assert curve.bytes_accessed[0] < curve.bytes_accessed[2]
+
+
+@pytest.mark.slow
+def test_full_registry_passes_all_contracts():
+    violations = contracts.check_algorithms()
+    assert violations == [], "\n".join(v.render() for v in violations)

@@ -1,0 +1,91 @@
+"""AST lint (repro.analysis.lint_jax): rule positives via the negative
+fixtures, suppression syntax, and the clean-tree invariant on src/."""
+import textwrap
+
+import pytest
+
+from repro.analysis import fixtures, lint_jax
+
+_LINT_RULES = sorted(r for r in fixtures.FIXTURES if r.startswith(("JXH", "PYL")))
+
+
+def _lint(source):
+    return lint_jax.lint_source(textwrap.dedent(source), "test.py")
+
+
+@pytest.mark.parametrize("rule_id", _LINT_RULES)
+def test_fixture_caught(rule_id):
+    """Each deliberately-bad program fires exactly its own rule."""
+    found = fixtures.run_fixture(rule_id)
+    assert any(v.rule == rule_id for v in found), f"{rule_id} fixture missed"
+
+
+def test_rule_catalog_complete():
+    """Every registered lint rule has a negative fixture (self-test cover)."""
+    assert set(_LINT_RULES) == set(lint_jax.LINT_RULES)
+
+
+def test_violation_carries_location_and_hint():
+    (v,) = [v for v in fixtures.run_fixture("JXH004") if v.rule == "JXH004"]
+    assert "fixture.py" in v.where
+    assert v.hint
+
+
+# ------------------------------------------------------------- suppression
+def test_inline_disable_comment():
+    src = """
+    def pull(rates, pos):
+        return [float(rates[i]) for i in pos]  # repro-lint: disable=JXH002
+    """
+    assert _lint(src) == []
+
+
+def test_disable_comment_on_line_above():
+    src = """
+    def pull(rates, pos):
+        # repro-lint: disable=JXH002 — host-side list
+        return [float(rates[i]) for i in pos]
+    """
+    assert _lint(src) == []
+
+
+def test_disable_all():
+    src = """
+    def accumulate(x, acc=[]):  # repro-lint: disable=all
+        acc.append(x)
+        return acc
+    """
+    assert _lint(src) == []
+
+
+def test_disable_other_rule_does_not_suppress():
+    src = """
+    def pull(rates, pos):
+        return [float(rates[i]) for i in pos]  # repro-lint: disable=JXH001
+    """
+    assert any(v.rule == "JXH002" for v in _lint(src))
+
+
+def test_noqa_spares_reexport_imports():
+    src = """
+    from os.path import join  # noqa: F401 (re-export)
+    """
+    assert _lint(src) == []
+
+
+def test_rules_filter():
+    src = """
+    import os
+
+    def head(list):
+        return list[0]
+    """
+    found = lint_jax.lint_source(textwrap.dedent(src), "t.py", rules={"PYL002"})
+    assert {v.rule for v in found} == {"PYL002"}
+
+
+# ------------------------------------------------------------ tree is clean
+def test_src_tree_is_lint_clean():
+    """The shipped tree must stay lint-clean — same invariant CI enforces."""
+    violations = lint_jax.lint_paths(("src", "benchmarks"))
+    assert violations == [], "\n".join(v.render() for v in violations)

@@ -1,0 +1,75 @@
+"""Recompilation guard: the compile counter, the budget context manager, and
+the steady-state invariant for the sync schedule at smoke scale."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.recompile_guard import (
+    DEFAULT_BUDGETS,
+    CompilationCounter,
+    RecompileBudgetExceeded,
+    check_experiment_recompiles,
+    recompile_guard,
+)
+
+
+def _fresh_fn():
+    # a lambda defined at call time never hits jit's in-memory cache
+    return jax.jit(lambda x: x * 3.0 + 1.0)
+
+
+def test_counter_sees_fresh_compile_and_not_cache_hits():
+    f = _fresh_fn()
+    with CompilationCounter() as c:
+        f(jnp.float32(1.0))
+    assert c.count >= 1
+    with CompilationCounter() as c2:
+        f(jnp.float32(2.0))  # same shape/dtype: cached executable
+    assert c2.count == 0
+
+
+def test_counter_unregisters_on_exit():
+    with CompilationCounter() as c:
+        pass
+    before = c.count
+    _fresh_fn()(jnp.float32(1.0))  # compile AFTER the context closed
+    assert c.count == before
+
+
+def test_guard_raises_on_static_arg_churn():
+    f = jax.jit(lambda x, s: x + s, static_argnums=(1,))
+    with pytest.raises(RecompileBudgetExceeded, match="budget"):
+        with recompile_guard(1, label="churn"):
+            for s in range(4):
+                f(jnp.float32(0.0), 1000 + s)
+
+
+def test_guard_passes_within_budget():
+    f = _fresh_fn()
+    with recompile_guard(2, label="single compile") as c:
+        f(jnp.float32(1.0))
+        f(jnp.float32(2.0))
+    assert c.count <= 2
+
+
+def test_fixture_reports_violation():
+    from repro.analysis import fixtures
+
+    found = fixtures.run_fixture("recompile")
+    assert any(v.rule == "recompile" for v in found)
+
+
+# -------------------------------------------------- steady-state invariant
+def test_sync_schedule_steady_state_compiles_nothing():
+    """After warmup, extending a sync-schedule run must hit only cached
+    executables (budget 0) — the invariant CI enforces via the CLI."""
+    assert DEFAULT_BUDGETS["sync"] == 0
+    violations = check_experiment_recompiles(policies=("sync",))
+    assert violations == [], "\n".join(v.render() for v in violations)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ["deadline", "async-buffer"])
+def test_other_schedules_within_budget(policy):
+    violations = check_experiment_recompiles(policies=(policy,))
+    assert violations == [], "\n".join(v.render() for v in violations)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import api
+from repro.analysis import jaxpr_contracts
 from repro.configs import (
     ARCH_IDS,
     FederatedConfig,
@@ -119,31 +120,15 @@ def _client_setup(layout, stld_mode="cond"):
     return fns, base, args
 
 
-def _walk_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            for x in v if isinstance(v, (list, tuple)) else (v,):
-                inner = getattr(x, "jaxpr", x)
-                if hasattr(inner, "eqns"):
-                    yield from _walk_eqns(inner)
-
-
 def _stacking_concats(fns, base, args, num_active=None):
     """Concatenate eqns in the traced local_round whose output shape matches
-    a stacked base-layer leaf (i.e. trace-time layer stacking)."""
-    layers = base["layers"]
-    stacked = layers if stacking.is_stacked(layers) else stacking.stack_params(layers)
-    target_shapes = {tuple(x.shape) for x in jax.tree.leaves(stacked)}
+    a stacked base-layer leaf (i.e. trace-time layer stacking).  The walker
+    lives in ``repro.analysis`` and is shared with the contract checker."""
+    target_shapes = jaxpr_contracts.stacked_leaf_shapes(base["layers"])
     jaxpr = jax.make_jaxpr(
         lambda *a: fns.local_round(*a, num_active=num_active)
     )(*args)
-    return [
-        eqn
-        for eqn in _walk_eqns(jaxpr.jaxpr)
-        if eqn.primitive.name == "concatenate"
-        and any(tuple(ov.aval.shape) in target_shapes for ov in eqn.outvars)
-    ]
+    return jaxpr_contracts.stacking_concats(jaxpr, target_shapes)
 
 
 @pytest.mark.parametrize("stld_mode,num_active", [("cond", None), ("gather", 2)])
