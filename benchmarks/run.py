@@ -24,6 +24,7 @@ from benchmarks import (
     fig15_noniid,
     kernel_bench,
     roofline,
+    serve_bench,
     table1_overhead,
     table3_time_to_accuracy,
 )
@@ -32,6 +33,7 @@ BENCHES = {
     "cohort": cohort_bench.run,
     "round": round_bench.run,
     "schedule": schedule_bench.run,
+    "serve": serve_bench.run,
     "table1": table1_overhead.run,
     "fig2": fig2_breakdown.run,
     "fig3": fig3_memory.run,

@@ -1,24 +1,55 @@
-"""Serving example: LoRA-merged deployment + KV-cache greedy decoding,
-including the sequence-sharded LSE-combined attention math used for
-long_500k decode.
+"""Serving examples: (1) multi-tenant adapter serving — two federated
+clients' LoRA adapters answering interleaved requests through ONE compiled
+decode step; (2) LoRA-merged single-tenant deployment; (3) the
+sequence-sharded LSE-combined attention math used for long_500k decode.
 
     PYTHONPATH=src python examples/serving_decode.py
 """
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.configs import PEFTConfig, get_config
 from repro.core import peft as peft_lib
 from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import init_params
 from repro.models.transformer import init_caches
+from repro.serving import Request
 from repro.serving.decode import _partial_attention, generate
 
 key = jax.random.PRNGKey(0)
+
+# --- multi-tenant: two clients' adapters, one decode batch ---------------
+# In a real deployment the adapters come out of a federated run's
+# checkpoint: api.serve(checkpoint_dir="ckpts") registers every client's
+# adapter as "client<id>". Here we build two hetlora clients in-process
+# (different ranks — they still share one pooled kernel).
+cfg = get_config("qwen3-1.7b", smoke=True).replace(num_layers=2, dtype="float32")
+adapters = {}
+for i, rank in enumerate((4, 8)):
+    pcfg = PEFTConfig(method="lora", lora_rank=rank, lora_targets=("q", "v"))
+    tree = peft_lib.init_peft(jax.random.fold_in(key, i), cfg, pcfg)
+    adapters[f"client{i}"] = jax.tree.map(  # LoRA init keeps b=0; perturb
+        lambda x: x + 0.02 * jax.random.normal(jax.random.fold_in(key, 9), x.shape),
+        tree,
+    )
+
+batcher = api.serve(cfg=cfg, adapters=adapters, batch=3, max_len=32,
+                    cache_dtype="float32")
+requests = [
+    Request(prompt=[5, 7, 11], adapter="client0", max_new_tokens=6, uid="a"),
+    Request(prompt=[13, 17], adapter="client1", max_new_tokens=6, uid="b"),
+    Request(prompt=[19, 23, 29], adapter="client0", max_new_tokens=4, uid="c"),
+]
+for r in requests:
+    batcher.submit(r)
+for c in sorted(batcher.run(), key=lambda c: c.uid):
+    print(f"req {c.uid} [{c.adapter}] {c.finish_reason}: {c.tokens}")
+print(f"pool: {batcher.pool.n_slots} slots, {batcher.pool.swaps} swaps")
+
+# --- single-tenant deployment: fold one LoRA into the base weights -------
 cfg = get_config("h2o-danube-1.8b", smoke=True).replace(dtype="float32", sliding_window=32)
 params = init_params(key, cfg)
-
-# deployment path: fold trained LoRA into the base weights
 peft_cfg = PEFTConfig(method="lora", lora_rank=4)
 lora = peft_lib.init_peft(jax.random.fold_in(key, 1), cfg, peft_cfg)
 params = dict(params, layers=peft_lib.merge_lora_into_base(

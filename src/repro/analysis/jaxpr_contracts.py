@@ -550,6 +550,51 @@ def decode_trace(*, where="serving/decode", num_tokens=4) -> ProgramTrace:
     return make_trace(where, closed, shapes)
 
 
+def batched_decode_trace(
+    *, where="serving/batched_decode", num_layers=4, num_tokens=4
+) -> ProgramTrace:
+    """Trace one multi-tenant batched decode step: pooled mixed-rank
+    adapters (segmented gather kernel), stacked batched KV caches, per-row
+    positions.  The pooled peft and the stacked caches are both O(k)-leaf
+    trees, so this program must satisfy the same leaf budget as training.
+    """
+    key = ("batched_decode", num_layers, num_tokens)
+    cached = _trace_cache.get(key)
+    if cached is None:
+        from repro.configs import PEFTConfig
+        from repro.core import peft as peft_lib
+        from repro.launch.steps import make_serve_step
+        from repro.models.registry import init_params
+        from repro.serving.adapters import AdapterPoolCache, AdapterRegistry
+        from repro.serving.batcher import batched_caches
+
+        cfg = _smoke_cfg(num_layers)
+        prng = jax.random.PRNGKey(0)
+        params = init_params(prng, cfg)
+        registry = AdapterRegistry()
+        for i, rank in enumerate((2, 4)):  # hetlora mixed ranks in one pool
+            registry.register(
+                f"client{i}",
+                peft_lib.init_peft(
+                    prng, cfg,
+                    PEFTConfig(method="lora", lora_rank=rank, lora_targets=("q", "v")),
+                ),
+            )
+        pool = AdapterPoolCache(registry, n_slots=2)
+        peft = pool.pooled_peft(jnp.asarray([0, 1], jnp.int32))
+        serve = make_serve_step(cfg, stack_mode="scan")
+        caches = batched_caches(cfg, 2, 16, dtype=jnp.dtype(cfg.dtype))
+        token = jnp.zeros((2, 1), dtype=jnp.int32)
+        pos = jnp.zeros((2,), dtype=jnp.int32)
+        closed = jax.make_jaxpr(
+            lambda p, pf, t, ps, c: serve(p, t, ps, c, peft=pf)[0]
+        )(params, peft, token, pos, caches)
+        cached = (closed, stacked_leaf_shapes(params["layers"]))
+        _trace_cache[key] = cached
+    closed, shapes = cached
+    return make_trace(where, closed, shapes)
+
+
 # ----------------------------------------------------------------- top level
 def check_algorithms(
     algorithms: Optional[Sequence[str]] = None,
@@ -593,4 +638,10 @@ def check_algorithms(
         if progress:
             progress("serving/decode")
         violations += check_trace_rules(decode_trace())
+        if progress:
+            progress("serving/batched_decode")
+        btr = batched_decode_trace()
+        btr_2l = batched_decode_trace(num_layers=8)
+        violations += check_trace_rules(btr)
+        violations += check_leaf_budget(btr, btr_2l)
     return violations

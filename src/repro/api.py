@@ -43,6 +43,7 @@ __all__ = [
     "build",
     "experiment",
     "replicate",
+    "serve",
     "list_methods",
     "ScheduleConfig",
 ]
@@ -160,6 +161,70 @@ def build(
         checkpoint_dir=checkpoint_dir,
         checkpoint_every=checkpoint_every,
         resume=resume,
+    )
+
+
+def serve(
+    model: str = "qwen3-1.7b",
+    *,
+    smoke: bool = True,
+    cfg=None,
+    model_overrides: Optional[dict] = None,
+    params=None,
+    # adapter sources: a federated checkpoint dir and/or named trees
+    checkpoint_dir: Optional[str] = None,
+    adapters: Optional[dict] = None,
+    lora_alpha: float = 16.0,
+    # serving shape
+    batch: int = 4,
+    max_len: int = 256,
+    n_slots: Optional[int] = None,
+    stack_mode: str = "scan",
+    cache_dtype: str = "bfloat16",
+    seed: int = 0,
+):
+    """Multi-tenant adapter serving: a ready :class:`ContinuousBatcher`.
+
+    Adapters come from a federated ``save_state`` checkpoint
+    (``checkpoint_dir`` — every client's adapter registers as
+    ``client<id>``) and/or an explicit ``{name: peft_tree}`` dict.  Submit
+    :class:`~repro.serving.batcher.Request`s against adapter names and call
+    ``run()``; heterogeneous ranks, prompts, and stop conditions share one
+    compiled decode step.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.steps import make_serve_step
+    from repro.models import init_params
+    from repro.serving.adapters import AdapterPoolCache, AdapterRegistry
+    from repro.serving.batcher import ContinuousBatcher
+
+    if cfg is None:
+        cfg = get_config(model, smoke=smoke)
+    if model_overrides:
+        cfg = cfg.replace(**model_overrides)
+    if params is None:
+        params = init_params(jax.random.PRNGKey(seed), cfg)
+    registry = AdapterRegistry()
+    if checkpoint_dir is not None:
+        registry.load_checkpoint(checkpoint_dir, alpha=lora_alpha)
+    for name, tree in (adapters or {}).items():
+        registry.register(name, tree, alpha=lora_alpha)
+    if len(registry) == 0:
+        raise ValueError("no adapters: pass checkpoint_dir and/or adapters")
+    pool = AdapterPoolCache(
+        registry, n_slots=n_slots if n_slots is not None else max(batch, len(registry))
+    )
+    serve_step = make_serve_step(cfg, stack_mode=stack_mode)
+    return ContinuousBatcher(
+        serve_step,
+        params,
+        cfg,
+        pool,
+        batch=batch,
+        max_len=max_len,
+        cache_dtype=jnp.dtype(cache_dtype),
     )
 
 

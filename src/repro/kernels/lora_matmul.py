@@ -37,9 +37,18 @@ def lora_matmul_pallas(
     alpha: float = 1.0,
     block_m: int = DEFAULT_BLOCK_M,
     block_n: int = DEFAULT_BLOCK_N,
-    interpret: bool = True,
+    interpret=None,
 ):
-    """x: (M, K); w: (K, N); a: (K, r); b: (r, N).  Returns (M, N)."""
+    """x: (M, K); w: (K, N); a: (K, r); b: (r, N).  Returns (M, N).
+
+    ``interpret=None`` resolves from the cached backend query — interpret
+    mode on CPU, the compiled kernel on TPU/GPU — so direct callers get the
+    real kernel off-CPU instead of a silently interpreted one.
+    """
+    if interpret is None:
+        from repro.kernels.ops import is_cpu_backend
+
+        interpret = is_cpu_backend()
     m, kdim = x.shape
     n = w.shape[1]
     r = a.shape[1]

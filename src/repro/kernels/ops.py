@@ -12,7 +12,7 @@ making it part of the cache key — a stale answer after a backend switch.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -24,8 +24,19 @@ from repro.kernels.mamba_scan import mamba_scan_pallas
 from repro.kernels.rwkv6_scan import wkv6_pallas
 
 
-def _is_cpu() -> bool:
+@cache
+def is_cpu_backend() -> bool:
+    """Cached backend query: does Pallas need interpret mode here?
+
+    Safe to cache for the process lifetime — JAX fixes the default backend
+    at first use.  The kernels' ``interpret=None`` defaults resolve through
+    this, so GPU/TPU runs compile the real kernels while CPU CI keeps the
+    interpret path, without baking an uncached env query into traced code.
+    """
     return jax.devices()[0].platform == "cpu"
+
+
+_is_cpu = is_cpu_backend
 
 
 @partial(
@@ -109,5 +120,37 @@ def _lora_matmul(x, w, a, b, *, alpha, impl, block_m, block_n, interpret):
 def lora_matmul(x, w, a, b, *, alpha: float = 1.0, impl: str = "pallas", block_m: int = 128, block_n: int = 128):
     return _lora_matmul(
         x, w, a, b, alpha=alpha, impl=impl, block_m=block_m, block_n=block_n,
+        interpret=_is_cpu(),
+    )
+
+
+@partial(jax.jit, static_argnames=("impl", "block_n", "interpret"))
+def _segmented_lora(x, w, a, b, idx, ranks, *, impl, block_n, interpret):
+    if impl == "xla":
+        # gather formulation: one batched matmul chain over per-row adapters
+        ar = a[idx].astype(x.dtype)          # (M, K, r_max)
+        br = b[idx].astype(x.dtype)          # (M, r_max, N)
+        t = jnp.einsum("mk,mkr->mr", x.astype(jnp.float32), ar.astype(jnp.float32))
+        rmask = jnp.arange(a.shape[-1])[None, :] < ranks[idx][:, None]
+        t = jnp.where(rmask, t, 0.0)
+        side = jnp.einsum(
+            "mr,mrn->mn", t.astype(x.dtype).astype(jnp.float32), br.astype(jnp.float32)
+        )
+        main = x.astype(jnp.float32) @ w.astype(jnp.float32)
+        return (main + side).astype(x.dtype)
+    from repro.kernels.segmented_lora import segmented_lora_pallas
+
+    return segmented_lora_pallas(
+        x, w, a, b, idx, ranks, block_n=block_n, interpret=interpret
+    )
+
+
+def segmented_lora(x, w, a, b, idx, ranks, *, impl: str = "pallas", block_n: int = 128):
+    """Multi-tenant LoRA matmul: row i uses adapter ``idx[i]`` from the
+    stacked pool.  x: (M, K); w: (K, N); a: (NA, K, r_max);
+    b: (NA, r_max, N) with per-adapter scale pre-folded in; idx: (M,);
+    ranks: (NA,)."""
+    return _segmented_lora(
+        x, w, a, b, idx, ranks, impl=impl, block_n=block_n,
         interpret=_is_cpu(),
     )

@@ -69,3 +69,38 @@ def lora_matmul_ref(x, w, a, b, *, alpha: float = 1.0):
     return (
         xf @ w.astype(jnp.float32) + alpha * (xf @ a.astype(jnp.float32)) @ b.astype(jnp.float32)
     ).astype(x.dtype)
+
+
+@jax.jit
+def _segmented_row_ref(xi, w, ai, bi, rank):
+    main = jax.lax.dot(xi, w, preferred_element_type=jnp.float32)
+    t = jax.lax.dot(xi, ai, preferred_element_type=jnp.float32)
+    t = jnp.where(jnp.arange(ai.shape[-1])[None, :] < rank, t, 0.0)
+    side = jax.lax.dot(t.astype(xi.dtype), bi, preferred_element_type=jnp.float32)
+    return (main + side).astype(xi.dtype)
+
+
+def segmented_lora_ref(x, w, a, b, idx, ranks):
+    """Per-request adapter-switching oracle for the segmented kernel.
+
+    One row at a time — exactly what a server without multi-tenant batching
+    does: look up the row's adapter, run the plain fused-LoRA math with it.
+    Host loop over rows (``idx`` concrete); the row body mirrors the
+    kernel's op order (f32 dots over the full ``r_max`` bottleneck with the
+    rank tail masked to zero, cast back to the input dtype between the two
+    side dots) so float32 inputs compare bit-for-bit.  The row body is
+    jitted for the same reason: XLA fuses the final ``main + side`` add
+    into the gemm epilogue, which rounds differently from an eager
+    compute-then-add — both sides must go through the same rewrite.
+    Slicing ``a[s][:, :r]`` instead of masking is mathematically identical
+    but regroups the f32 reduction, so the true-rank equivalence is an
+    allclose property, not a bitwise one.  The per-adapter LoRA scale is
+    pre-folded into ``b`` (see ``segmented_lora_pallas``) — no scalar
+    multiply appears here either.
+    """
+    import numpy as np
+
+    rows = []
+    for i, s in enumerate(np.asarray(idx).tolist()):
+        rows.append(_segmented_row_ref(x[i : i + 1], w, a[s], b[s], ranks[s]))
+    return jnp.concatenate(rows, axis=0)

@@ -7,6 +7,15 @@ Exercises the full serving path (prefill_step -> serve_step loop) for any
 assigned architecture, including recurrent-state archs and the whisper
 encoder-decoder.  With ``--merge-lora`` a trained LoRA checkpoint is folded
 into the base weights first (deployment path).
+
+Multi-tenant mode — ``--adapters N`` serves N tenants' LoRA adapters
+(mixed hetlora ranks) through the continuous batcher and the segmented
+gather kernel, one compiled decode step for the whole mix::
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke --adapters 3 \
+        --batch 4 --gen-len 16
+    PYTHONPATH=src python -m repro.launch.serve --smoke \
+        --checkpoint-dir ckpts --batch 4    # federated client adapters
 """
 from __future__ import annotations
 
@@ -24,6 +33,53 @@ from repro.models.transformer import init_caches
 from repro.serving.decode import generate
 
 
+def _serve_multi_adapter(cfg, params, key, args):
+    """Continuous-batching decode over per-tenant adapters."""
+    from repro import api
+    from repro.serving.batcher import Request
+
+    adapters = None
+    if args.checkpoint_dir is None:
+        # synthetic tenants with alternating hetlora ranks
+        adapters = {}
+        for i in range(args.adapters):
+            rank = (4, 8)[i % 2]
+            pcfg = PEFTConfig(method="lora", lora_rank=rank, lora_targets=("q", "v"))
+            tree = peft_lib.init_peft(jax.random.fold_in(key, 100 + i), cfg, pcfg)
+            adapters[f"tenant{i}"] = tree
+    batcher = api.serve(
+        cfg=cfg,
+        params=params,
+        checkpoint_dir=args.checkpoint_dir,
+        adapters=adapters,
+        batch=args.batch,
+        max_len=args.prompt_len + args.gen_len,
+        cache_dtype=cfg.dtype,
+    )
+    names = batcher.pool.registry.names()
+    for j in range(max(args.batch, len(names))):
+        prompt = jax.random.randint(
+            jax.random.fold_in(key, j), (args.prompt_len,), 0, cfg.vocab_size
+        )
+        batcher.submit(
+            Request(
+                prompt=prompt.tolist(),
+                adapter=names[j % len(names)],
+                max_new_tokens=args.gen_len,
+                uid=j,
+            )
+        )
+    t0 = time.time()
+    done = batcher.run()
+    dt = time.time() - t0
+    total = sum(len(c.tokens) for c in done)
+    print(f"arch={cfg.name} tenants={len(names)} requests={len(done)} "
+          f"slots={batcher.pool.n_slots} swaps={batcher.pool.swaps}")
+    print(f"decode: {dt*1e3:.1f} ms ({total/max(dt,1e-9):.1f} tok/s)")
+    for c in done[: args.batch]:
+        print(f"  req {c.uid} [{c.adapter}] {c.finish_reason}: {c.tokens[:8]}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-1.7b", choices=list(ARCH_IDS))
@@ -32,12 +88,20 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--merge-lora", action="store_true")
+    ap.add_argument("--adapters", type=int, default=0,
+                    help="serve N synthetic tenant adapters (multi-tenant mode)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="serve the client adapters of a federated checkpoint")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     key = jax.random.PRNGKey(args.seed)
     params = init_params(key, cfg)
+
+    if args.adapters > 0 or args.checkpoint_dir is not None:
+        _serve_multi_adapter(cfg, params, key, args)
+        return
 
     if args.merge_lora:
         peft_cfg = PEFTConfig(method="lora")

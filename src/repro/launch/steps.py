@@ -141,10 +141,18 @@ def make_serve_step(cfg, *, stack_mode: str = "unroll"):
 
     (params, token (B,1), pos (), caches [, enc_kvs]) ->
         (logits (B, V), next_token (B, 1), caches)
+
+    ``pos`` may also be a ``(B,)`` vector — the multi-tenant serving path,
+    where continuous batching runs every row at its own depth — and ``peft``
+    an adapter tree (e.g. per-projection :class:`~repro.nn.linear.AdapterPool`
+    nodes) applied during decode.  Pass ``peft`` as a traced argument, not a
+    closure constant, so adapter hot-swaps reuse the compiled step.
     """
 
-    def serve_step(params, token, pos, caches, enc_kvs=None):
-        positions = pos + jnp.arange(1)
+    def serve_step(params, token, pos, caches, enc_kvs=None, peft=None):
+        positions = pos[..., None] + jnp.arange(1)  # () -> (1,); (B,) -> (B,1)
+        if jnp.ndim(pos) == 0:
+            positions = positions.reshape(1)
         batch = {"tokens": token}
         if cfg.is_encoder_decoder:
             logits, _, caches = encdec.decode(
@@ -154,6 +162,7 @@ def make_serve_step(cfg, *, stack_mode: str = "unroll"):
                 enc_kvs,
                 positions=positions,
                 caches=caches,
+                peft=peft,
                 stack_mode=stack_mode,
             )
         else:
@@ -163,6 +172,7 @@ def make_serve_step(cfg, *, stack_mode: str = "unroll"):
                 batch,
                 positions=positions,
                 caches=caches,
+                peft=peft,
                 stack_mode=stack_mode,
             )
         logits = logits[:, -1]

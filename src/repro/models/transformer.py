@@ -88,8 +88,17 @@ def init_lm(key, cfg, layout: str = "auto"):
     return params
 
 
-def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
-    return [init_layer_cache(cfg, l, batch, max_len, dtype) for l in range(cfg.num_layers)]
+def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, layout: str = "list"):
+    """Per-layer decode caches.  ``layout='stacked'`` returns one pytree
+    with a leading ``(L, ...)`` axis per leaf (homogeneous stacks only) —
+    O(k) jit arguments instead of O(L·k), which is what keeps the serving
+    step inside the jaxpr leaf budget."""
+    caches = [init_layer_cache(cfg, l, batch, max_len, dtype) for l in range(cfg.num_layers)]
+    if layout == "stacked":
+        return stacking.stack_params(caches)
+    if layout != "list":
+        raise ValueError(f"unknown cache layout {layout!r}")
+    return caches
 
 
 # --------------------------------------------------------------------------
@@ -137,9 +146,10 @@ def stack_apply(
     # ---------------------------------------------------------- unroll
     if stack_mode == "unroll":
         aux_sum = jnp.zeros((), dtype=jnp.float32)
+        caches_stacked = caches is not None and stacking.is_stacked(caches)
         new_caches = [] if caches is not None else None
         for l in range(num_layers):
-            cache_l = caches[l] if caches is not None else None
+            cache_l = stacking.layer_view(caches, l) if caches is not None else None
             peft_l = stacking.layer_view(peft, l) if peft is not None else None
             enc_kv_l = stacking.layer_view(enc_kvs, l) if enc_kvs is not None else None
             p_l = stacking.layer_view(layers, l)
@@ -151,6 +161,8 @@ def stack_apply(
             aux_sum = aux_sum + aux
             if new_caches is not None:
                 new_caches.append(cache_l)
+        if caches_stacked:
+            new_caches = stacking.stack_params(new_caches)
         return h, aux_sum, new_caches
 
     # -------------------------------------------------- gather_unroll
@@ -209,6 +221,10 @@ def stack_apply(
         aux_sum = jnp.sum(auxs)
         if caches is None:
             return h, aux_sum, None
+        if stacking.is_stacked(caches):
+            # stacked in, stacked out: the scan's (L, ...) output IS the
+            # stacked layout — no per-layer unstack in the traced program
+            return h, aux_sum, new_caches_s
         new_caches = [jax.tree.map(lambda x: x[i], new_caches_s) for i in range(num_layers)]
         return h, aux_sum, new_caches
 
@@ -268,6 +284,8 @@ def stack_apply(
         for g in range(n_groups):
             for s in range(period):
                 new_caches.append(jax.tree.map(lambda x: x[g], new_slot_caches[s]))
+        if stacking.is_stacked(caches):
+            new_caches = stacking.stack_params(new_caches)
         return h, aux_sum, new_caches
 
     raise ValueError(f"unknown stack_mode {stack_mode!r}")

@@ -46,19 +46,27 @@ def init_attention(key, cfg):
 
 
 def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]):
-    """Additive mask bias (Sq, Skv) from absolute positions."""
-    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    """Additive mask bias from absolute positions.
+
+    1D positions give (Sq, Skv); batched 2D positions — (B, Sq) / (B, Skv),
+    the serving path where every row decodes at its own depth — give
+    (B, Sq, Skv).
+    """
+    qe, ke = q_pos[..., :, None], k_pos[..., None, :]
+    shape = jnp.broadcast_shapes(qe.shape, ke.shape)
+    ok = jnp.broadcast_to(jnp.asarray(True), shape)
     if causal:
-        ok = ok & (k_pos[None, :] <= q_pos[:, None])
+        ok = ok & (ke <= qe)
     if window is not None:
-        ok = ok & (k_pos[None, :] > q_pos[:, None] - window)
+        ok = ok & (ke > qe - window)
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
 
 
 def _sdpa(q, k, v, bias):
     """Grouped-GQA attention without materialising repeated KV heads.
 
-    q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd); bias: (Sq,Skv) additive fp32.
+    q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd); bias: (Sq,Skv) additive fp32, or
+    (B,Sq,Skv) for per-row masks (batched serving decode).
     The einsum carries a (kv-group, repeat) split of the query heads, so the
     KV tensors are contracted directly — no (B,S,KV,rep,hd) broadcast copy
     (which GSPMD could not reshard efficiently for head_dim-sharded caches).
@@ -68,7 +76,8 @@ def _sdpa(q, k, v, bias):
     rep = h // kv
     qg = q.reshape(b, sq, kv, rep, hd)
     scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32)
-    scores = scores * (hd**-0.5) + bias[None, None, None]
+    bias = bias[:, None, None] if bias.ndim == 3 else bias[None, None, None]
+    scores = scores * (hd**-0.5) + bias
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
     return out.reshape(b, sq, h, hd)
@@ -84,8 +93,15 @@ def multi_head_attention(
     causal: bool = True,
     window: Optional[int] = None,
 ):
-    """Blocked-or-naive masked attention.  q: (B,S,H,hd); k,v: (B,S,KV,hd)."""
+    """Blocked-or-naive masked attention.  q: (B,S,H,hd); k,v: (B,S,KV,hd).
+
+    Batched (B, S) positions take the naive path only — serving decode is
+    one query token per row, so the score tile is always small.
+    """
     sq, skv = q.shape[1], k.shape[1]
+    if jnp.ndim(q_positions) == 2:
+        bias = _mask_bias(q_positions, k_positions, causal, window)
+        return _sdpa(q, k, v, bias)
     if sq * skv <= _MAX_NAIVE_SCORES or sq < 2:
         bias = _mask_bias(q_positions, k_positions, causal, window)
         return _sdpa(q, k, v, bias)
@@ -142,6 +158,44 @@ def attention_apply(
         # write (pos + s <= cache_len).
         pos = cache["pos"]
         cache_len = cache["k"].shape[1]
+        if jnp.ndim(pos) == 1:
+            # Batched serving cache: one write position per row, because
+            # continuous batching runs rows at different sequence depths.
+            # Token-level admission keeps this to one new token per row.
+            if s != 1:
+                raise ValueError(
+                    "batched KV cache (per-row positions) decodes one token "
+                    f"per row per step, got S={s}"
+                )
+            rows = jnp.arange(b)
+            write_pos = pos % cache_len
+            ck = cache["k"].at[rows, write_pos].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, write_pos].set(v[:, 0].astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv, "pos": pos + s}
+            k_full, v_full = ck.astype(x.dtype), cv.astype(x.dtype)
+            last_pos = pos + s - 1  # (B,)
+            slots = jnp.arange(cache_len)
+            k_positions = last_pos[:, None] - jnp.mod(
+                last_pos[:, None] - slots[None, :], cache_len
+            )
+            # Negative = slot not yet written *by this request*: a recycled
+            # row still holds the previous tenant's K/V in the ring, and the
+            # position mask keeps it inert without a cache clear.
+            k_positions = jnp.where(
+                k_positions < 0, jnp.iinfo(jnp.int32).max, k_positions
+            )
+            out = multi_head_attention(
+                q,
+                k_full,
+                v_full,
+                q_positions=positions,
+                k_positions=k_positions,
+                causal=True,
+                window=cfg.sliding_window,
+            )
+            out = out.reshape(b, s, h * hd)
+            out = apply_linear(params["wo"], out, peft.get("o"), lora_scale)
+            return out, new_cache
         if s >= cache_len:
             # Prefill longer than the ring (SWA window): attention runs over
             # the full in-sequence K/V (early queries need keys the ring

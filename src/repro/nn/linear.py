@@ -3,14 +3,49 @@
 LoRA params for a projection are ``{"a": (in, r), "b": (r, out)}``; the
 scaling alpha/r is folded into ``b`` at init-time scale 0 (b starts at zero),
 with the runtime ``scale`` passed explicitly so merged/unmerged paths agree.
+
+For multi-tenant serving a projection's peft node can instead be an
+:class:`AdapterPool` — a stacked pool of adapters plus a per-row slot map —
+in which case ``apply_linear`` dispatches to the segmented gather kernel so
+every batch row applies its own tenant's adapter in one launch.
 """
 from __future__ import annotations
 
-from typing import Optional
+from dataclasses import dataclass
+from typing import Any, Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.nn.initializers import truncated_lecun, zeros_init
+
+
+@dataclass(frozen=True)
+class AdapterPool:
+    """Per-projection multi-tenant adapter pool riding inside a peft tree.
+
+    ``a: (n_slots, d_in, r_max)`` and ``b: (n_slots, r_max, d_out)`` hold
+    zero-padded adapters with the per-adapter LoRA scale (alpha/rank)
+    pre-folded into ``b`` at slot-write time; ``ranks: (n_slots,)`` carries
+    each slot's true rank for the in-kernel tail mask; ``idx: (batch,)``
+    maps each batch row to its slot.  All fields are data (traced), so a
+    slot swap rewrites pool contents without changing any static shape —
+    the compiled serving step is reused across swaps.
+
+    In the stacked-native layout every field gains a leading layer axis
+    (``idx`` broadcast to ``(L, batch)``) so ``stacking.layer_view`` and
+    scan-mode slicing pass through an ``AdapterPool`` like any other leaf.
+    """
+
+    a: Any
+    b: Any
+    idx: Any
+    ranks: Any
+
+
+jax.tree_util.register_dataclass(
+    AdapterPool, data_fields=("a", "b", "idx", "ranks"), meta_fields=()
+)
 
 
 def init_linear(key, d_in: int, d_out: int, bias: bool = False, dtype=jnp.float32):
@@ -27,7 +62,31 @@ def lora_delta(x, lora, scale: float):
     return (x @ a) @ b * jnp.asarray(scale, dtype=x.dtype)
 
 
+def _pooled_linear(params, x, pool: AdapterPool):
+    """Segmented multi-adapter projection: row i applies adapter
+    ``pool.idx[i]``.  Main matmul and gathered LoRA branch run fused in one
+    kernel launch; the per-adapter scale is already folded into ``pool.b``.
+    """
+    from repro.kernels.ops import segmented_lora
+
+    w = params["w"].astype(x.dtype)
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, x.shape[-1])
+    idx = pool.idx
+    if x.ndim == 3 and x.shape[1] != 1:
+        idx = jnp.repeat(idx, x.shape[1])  # every token of a row shares its adapter
+    y = segmented_lora(
+        xm, w, pool.a.astype(x.dtype), pool.b.astype(x.dtype), idx, pool.ranks
+    )
+    y = y.reshape(*lead, w.shape[-1])
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
 def apply_linear(params, x, lora: Optional[dict] = None, lora_scale: float = 1.0):
+    if isinstance(lora, AdapterPool):
+        return _pooled_linear(params, x, lora)
     w = params["w"].astype(x.dtype)
     y = x @ w
     if "b" in params:

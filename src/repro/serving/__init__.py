@@ -1,3 +1,19 @@
+from repro.serving.adapters import AdapterPoolCache, AdapterRegistry
+from repro.serving.batcher import (
+    Completion,
+    ContinuousBatcher,
+    Request,
+    batched_caches,
+)
 from repro.serving.decode import generate, sharded_decode_attention
 
-__all__ = ["generate", "sharded_decode_attention"]
+__all__ = [
+    "AdapterPoolCache",
+    "AdapterRegistry",
+    "Completion",
+    "ContinuousBatcher",
+    "Request",
+    "batched_caches",
+    "generate",
+    "sharded_decode_attention",
+]

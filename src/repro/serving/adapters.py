@@ -1,0 +1,273 @@
+"""Adapter registry + pooled LRU cache for multi-tenant LoRA serving.
+
+:class:`AdapterRegistry` is the host-side catalogue: named LoRA trees (one
+per federated client, loaded straight from ``save_state`` checkpoints or
+registered in-process) with their rank and alpha.  Mixed ranks are the norm
+— hetlora trains clients at different ranks — and each entry keeps its true
+rank alongside the tree.
+
+:class:`AdapterPoolCache` owns the device-resident pools the segmented
+kernel reads: for every LoRA projection a stacked ``(L, n_slots, ...)``
+pool, zero-padded to the pool-wide ``r_max``, with the per-adapter
+``alpha / rank`` scale pre-folded into ``b`` at slot-write time (the kernel
+deliberately has no scale operand — see ``kernels/segmented_lora``).  Slot
+writes go through one jitted program whose slot index is *traced*, so
+hot-swapping an adapter into a recycled slot re-runs a compiled scatter —
+pool shapes are static and nothing recompiles.  Eviction is LRU over
+unpinned slots.
+"""
+from __future__ import annotations
+
+import os
+from collections import OrderedDict
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.models import stacking
+from repro.nn.linear import AdapterPool
+
+DEFAULT_LORA_ALPHA = 16.0  # PEFTConfig default
+
+
+def _is_lora_node(node) -> bool:
+    return isinstance(node, dict) and set(node.keys()) == {"a", "b"}
+
+
+def _walk(node, fn, path=()):
+    """Apply ``fn`` to every LoRA ``{"a","b"}`` node; rebuild around it."""
+    if _is_lora_node(node):
+        return fn(node, path)
+    if isinstance(node, dict):
+        return {k: _walk(v, fn, path + (k,)) for k, v in node.items()}
+    raise ValueError(
+        f"pooled serving supports pure-LoRA peft trees; found non-LoRA node "
+        f"at {'/'.join(path) or '<root>'}: {type(node).__name__}"
+    )
+
+
+def infer_rank(peft_tree) -> int:
+    """True rank of a LoRA tree = trailing dim of any ``a`` leaf."""
+    ranks = set()
+    _walk(peft_tree, lambda n, p: ranks.add(int(n["a"].shape[-1])) or n)
+    if len(ranks) != 1:
+        raise ValueError(f"mixed ranks within one adapter tree: {sorted(ranks)}")
+    return ranks.pop()
+
+
+class AdapterRegistry:
+    """Named catalogue of per-tenant LoRA trees (stacked layout)."""
+
+    def __init__(self):
+        self._entries: Dict[str, dict] = {}
+
+    def register(self, name: str, peft_tree, *, alpha: float = DEFAULT_LORA_ALPHA):
+        """Register a LoRA tree (list or stacked layout) under ``name``."""
+        if isinstance(peft_tree, (list, tuple)):
+            peft_tree = stacking.stack_params(list(peft_tree))
+        rank = infer_rank(peft_tree)
+        self._entries[name] = {"peft": peft_tree, "rank": rank, "alpha": float(alpha)}
+        return self
+
+    def load_checkpoint(
+        self,
+        checkpoint_dir: str,
+        *,
+        prefix: str = "client",
+        alpha: float = DEFAULT_LORA_ALPHA,
+    ):
+        """Register every client adapter from a federated ``save_state``
+        checkpoint.  ``checkpoint_dir`` may be a ``step_*`` dir, a run dir
+        whose latest step is used, or a trainer ``--ckpt-dir`` root holding
+        one arch-named run dir.  Clients land as ``f"{prefix}{device_id}"``;
+        the server-side global adapter as ``f"{prefix}_global"``.
+        """
+        state_dir = self._resolve_state_dir(checkpoint_dir)
+        arrays = self._load_arrays(state_dir)
+        device_peft = arrays.get("device_peft", {})
+        for dev, tree in device_peft.items():
+            self.register(f"{prefix}{dev}", tree, alpha=alpha)
+        if arrays.get("global_peft") is not None:
+            self.register(f"{prefix}_global", arrays["global_peft"], alpha=alpha)
+        return self
+
+    @staticmethod
+    def _resolve_state_dir(checkpoint_dir: str) -> str:
+        latest = ckpt_lib.latest_state_dir(checkpoint_dir)
+        if latest is not None:
+            return latest
+        if os.path.isfile(os.path.join(checkpoint_dir, "manifest.json")):
+            return checkpoint_dir  # already a step_* dir
+        runs = []
+        if os.path.isdir(checkpoint_dir):
+            for name in sorted(os.listdir(checkpoint_dir)):
+                sub = ckpt_lib.latest_state_dir(os.path.join(checkpoint_dir, name))
+                if sub is not None:
+                    runs.append(sub)
+        if len(runs) == 1:
+            return runs[0]
+        raise FileNotFoundError(
+            f"no checkpoint under {checkpoint_dir!r}"
+            + (f"; {len(runs)} run dirs found — pass one of them" if runs else "")
+        )
+
+    @staticmethod
+    def _load_arrays(state_dir: str) -> dict:
+        """Read either checkpoint schema as a ``{"global_peft", "device_peft"}``
+        dict: the runner's ``save_state`` (JSON skeleton) directly, or a
+        ``save_pytree`` manifest (``launch/train.py`` saves only the global
+        adapter that way) by rebuilding the nested dict from leaf paths."""
+        import json
+
+        import numpy as np
+
+        with open(os.path.join(state_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+        if "skeleton" in manifest:
+            return ckpt_lib.load_state(state_dir)[0]
+        data = np.load(os.path.join(state_dir, "arrays.npz"))
+        tree: dict = {}
+        for entry in manifest["leaves"]:
+            arr = data[entry["key"]]
+            if entry["dtype"] == "bfloat16":
+                import ml_dtypes
+
+                arr = arr.view(ml_dtypes.bfloat16)
+            *parents, leaf = entry["path"].split("/")
+            node = tree
+            for p in parents:
+                node = node.setdefault(p, {})
+            node[leaf] = arr
+        return {"global_peft": tree, "device_peft": {}}
+
+    def get(self, name: str) -> dict:
+        return self._entries[name]
+
+    def names(self):
+        return list(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+@jax.jit
+def _write_slot(pool_tree, padded_tree, slot):
+    """Compiled slot write: ``pool[:, slot] = adapter`` on every leaf.
+    ``slot`` is traced — swaps at different slots reuse this compile."""
+    return jax.tree.map(
+        lambda pool, x: pool.at[:, slot].set(x.astype(pool.dtype)),
+        pool_tree,
+        padded_tree,
+    )
+
+
+class AdapterPoolCache:
+    """LRU slot cache mapping registry adapters into device pools.
+
+    ``n_slots`` bounds concurrent tenants per compiled batch; ``r_max``
+    (default: max rank in the registry) sizes the shared rank padding.
+    """
+
+    def __init__(self, registry: AdapterRegistry, n_slots: int, r_max: Optional[int] = None):
+        if len(registry) == 0:
+            raise ValueError("registry is empty")
+        self.registry = registry
+        self.n_slots = int(n_slots)
+        self.r_max = int(
+            r_max
+            if r_max is not None
+            else max(registry.get(n)["rank"] for n in registry.names())
+        )
+        self._slots: "OrderedDict[str, int]" = OrderedDict()  # name -> slot (LRU order)
+        self._pinned: set = set()
+        template = registry.get(registry.names()[0])["peft"]
+        # pools: same structure as a client tree, every LoRA leaf grows a
+        # slot axis after the layer axis: a (L, K, r) -> (L, NS, K, r_max)
+        def pool_leaf(node, _path):
+            a, b = node["a"], node["b"]
+            lnum = a.shape[0]
+            return {
+                "a": jnp.zeros((lnum, self.n_slots, a.shape[1], self.r_max), jnp.float32),
+                "b": jnp.zeros((lnum, self.n_slots, self.r_max, b.shape[-1]), jnp.float32),
+            }
+
+        self._pool = _walk(template, pool_leaf)
+        self._ranks = jnp.zeros((self.n_slots,), jnp.int32)
+        self.swaps = 0  # slot writes performed (steady-state swap telemetry)
+
+    # ------------------------------------------------------------ slots
+    def _padded(self, entry):
+        """Zero-pad an adapter to r_max and pre-fold alpha/rank into b."""
+        scale = entry["alpha"] / entry["rank"]
+        pad_r = self.r_max - entry["rank"]
+
+        def pad(node, _path):
+            a, b = node["a"], node["b"]
+            return {
+                "a": jnp.pad(a, ((0, 0), (0, 0), (0, pad_r))),
+                "b": jnp.pad(b * jnp.asarray(scale, b.dtype), ((0, 0), (0, pad_r), (0, 0))),
+            }
+
+        return _walk(entry["peft"], pad)
+
+    def slot_of(self, name: str) -> int:
+        """Slot holding ``name``, loading (and possibly evicting) if absent."""
+        if name in self._slots:
+            self._slots.move_to_end(name)
+            return self._slots[name]
+        entry = self.registry.get(name)
+        if entry["rank"] > self.r_max:
+            raise ValueError(
+                f"adapter {name!r} rank {entry['rank']} exceeds pool r_max {self.r_max}"
+            )
+        if len(self._slots) < self.n_slots:
+            slot = len(self._slots)
+        else:
+            victim = next(
+                (n for n in self._slots if n not in self._pinned), None
+            )
+            if victim is None:
+                raise RuntimeError("all pool slots are pinned; cannot evict")
+            slot = self._slots.pop(victim)
+        # traced slot index: same compiled scatter for every swap
+        self._pool = _write_slot(self._pool, self._padded(entry), jnp.asarray(slot))
+        self._ranks = self._ranks.at[slot].set(entry["rank"])
+        self._slots[name] = slot
+        self.swaps += 1
+        return slot
+
+    def lookup(self, names) -> jnp.ndarray:
+        """Row -> slot map for a batch of adapter names, loading as needed."""
+        return jnp.asarray([self.slot_of(n) for n in names], jnp.int32)
+
+    def pin(self, name: str):
+        self.slot_of(name)
+        self._pinned.add(name)
+
+    def unpin(self, name: str):
+        self._pinned.discard(name)
+
+    # ------------------------------------------------------------- peft
+    def pooled_peft(self, row_slots):
+        """Peft tree with :class:`AdapterPool` nodes for a batch whose row i
+        serves the adapter in slot ``row_slots[i]``.  Pool arrays are shared
+        (no copies); ``idx``/``ranks`` broadcast to the leading layer axis so
+        ``layer_view``/scan slicing pass through unchanged.
+        """
+        row_slots = jnp.asarray(row_slots, jnp.int32)
+
+        def wrap(node, _path):
+            lnum = node["a"].shape[0]
+            return AdapterPool(
+                a=node["a"],
+                b=node["b"],
+                idx=jnp.broadcast_to(row_slots[None], (lnum, row_slots.shape[0])),
+                ranks=jnp.broadcast_to(self._ranks[None], (lnum, self.n_slots)),
+            )
+
+        return _walk(self._pool, wrap)

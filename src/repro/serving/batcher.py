@@ -1,0 +1,209 @@
+"""Continuous-batching request scheduler for multi-tenant LoRA decode.
+
+Orca-style token-level scheduling: the compiled program is ONE fixed-shape
+``(batch, 1)`` decode step — every wall-clock step each live row consumes
+one token (prompt tokens stream through the same program as generated
+ones), and finished rows are recycled for queued requests between steps.
+Admission, stop handling, and slot recycling are host-side bookkeeping;
+nothing about the device program changes when requests come and go, so the
+steady state runs a single compile no matter how tenants interleave.
+
+Each row serves its own tenant: the row's adapter is resolved through
+:class:`~repro.serving.adapters.AdapterPoolCache` and applied by the
+segmented gather kernel via per-row slot indices — distinct adapters,
+prompt lengths, and stop conditions coexist in one batch.
+
+Per-row KV state lives in a batched cache (``pos`` is a ``(B,)`` vector):
+recycling a row just resets its position to zero — ring-position masking in
+``attention_apply`` keeps the previous tenant's stale K/V inert without a
+cache clear.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import init_caches
+from repro.serving.adapters import AdapterPoolCache
+
+
+@dataclass
+class Request:
+    """One generation request bound to a named adapter."""
+
+    prompt: Sequence[int]
+    adapter: str
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    uid: Any = None
+
+
+@dataclass
+class Completion:
+    """Finished request: the tokens generated after the prompt."""
+
+    uid: Any
+    adapter: str
+    tokens: List[int] = field(default_factory=list)
+    finish_reason: str = "length"  # "length" | "eos"
+
+
+@dataclass
+class _Row:
+    req: Request
+    remaining_prompt: List[int]
+    generated: List[int] = field(default_factory=list)
+    slot: int = 0
+
+
+@jax.jit
+def _reset_rows(caches, pos_mask):
+    """Zero the cache positions of recycled rows (pos_mask: (B,) bool).
+
+    Only positions reset — the stale K/V of the previous request stays in
+    the ring and is masked out by position (see ``attention_apply``)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: (
+            jnp.where(pos_mask, 0, x)
+            if getattr(p[-1], "key", None) == "pos"
+            else x
+        ),
+        caches,
+    )
+
+
+def batched_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Stacked-layout caches with per-row ``(B,)`` positions."""
+    caches = init_caches(cfg, batch, max_len, dtype, layout="stacked")
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: (
+            jnp.zeros(x.shape + (batch,), x.dtype)
+            if getattr(p[-1], "key", None) == "pos"
+            else x
+        ),
+        caches,
+    )
+
+
+class ContinuousBatcher:
+    """Admit, step, and drain multi-tenant generation requests.
+
+    ``serve_step`` is the callable from ``make_serve_step`` (peft-aware);
+    the batcher jit-compiles one wrapper around it and reuses that compile
+    for the whole serving session — adapter swaps, admissions, and
+    recycles only change traced data.
+    """
+
+    def __init__(
+        self,
+        serve_step,
+        params,
+        cfg,
+        pool: AdapterPoolCache,
+        *,
+        batch: int,
+        max_len: int,
+        cache_dtype=jnp.bfloat16,
+        pad_id: int = 0,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.pool = pool
+        self.batch = int(batch)
+        self.max_len = int(max_len)
+        self.pad_id = int(pad_id)
+        self.queue: List[Request] = []
+        self.done: List[Completion] = []
+        self.rows: List[Optional[_Row]] = [None] * self.batch
+        self.caches = batched_caches(cfg, self.batch, self.max_len, cache_dtype)
+        self._tokens = np.full((self.batch,), pad_id, np.int32)
+        self._pos = np.zeros((self.batch,), np.int32)
+
+        def step_fn(params, peft, token, pos, caches):
+            return serve_step(params, token, pos, caches, peft=peft)
+
+        self._step = jax.jit(step_fn)
+
+    # -------------------------------------------------------------- admit
+    def submit(self, req: Request):
+        if not req.prompt:
+            raise ValueError("empty prompt")
+        self.queue.append(req)
+
+    def _admit(self):
+        """Fill free rows from the queue; reset recycled rows' positions."""
+        freed = np.zeros((self.batch,), bool)
+        for i in range(self.batch):
+            if self.rows[i] is None and self.queue:
+                req = self.queue.pop(0)
+                slot = self.pool.slot_of(req.adapter)
+                self.rows[i] = _Row(
+                    req=req, remaining_prompt=list(req.prompt), slot=slot
+                )
+                self._tokens[i] = self.rows[i].remaining_prompt.pop(0)
+                self._pos[i] = 0
+                freed[i] = True
+        if freed.any():
+            self.caches = _reset_rows(self.caches, jnp.asarray(freed))
+
+    # --------------------------------------------------------------- step
+    def step(self):
+        """One fused decode step over all live rows."""
+        self._admit()
+        live = [i for i in range(self.batch) if self.rows[i] is not None]
+        if not live:
+            return False
+        slots = [self.rows[i].slot if self.rows[i] else 0 for i in range(self.batch)]
+        peft = self.pool.pooled_peft(jnp.asarray(slots, jnp.int32))
+        _, nxt, self.caches = self._step(
+            self.params,
+            peft,
+            jnp.asarray(self._tokens)[:, None],
+            jnp.asarray(self._pos),
+            self.caches,
+        )
+        nxt = np.asarray(nxt)[:, 0].tolist()  # one transfer for the batch
+        self._pos += 1
+        for i in live:
+            row = self.rows[i]
+            if row.remaining_prompt:
+                # prompt still streaming: the model's prediction is ignored,
+                # the next prompt token is forced (teacher-forced prefill
+                # through the decode program — no separate prefill compile)
+                self._tokens[i] = row.remaining_prompt.pop(0)
+                continue
+            tok = nxt[i]
+            row.generated.append(tok)
+            hit_eos = row.req.eos_id is not None and tok == row.req.eos_id
+            out_of_budget = len(row.generated) >= row.req.max_new_tokens
+            out_of_cache = bool(self._pos[i] >= self.max_len)
+            if hit_eos or out_of_budget or out_of_cache:
+                self.done.append(
+                    Completion(
+                        uid=row.req.uid,
+                        adapter=row.req.adapter,
+                        tokens=list(row.generated),
+                        finish_reason="eos" if hit_eos else "length",
+                    )
+                )
+                self.rows[i] = None  # row recycles next _admit()
+                self._tokens[i] = self.pad_id
+                self._pos[i] = 0
+            else:
+                self._tokens[i] = tok
+        return True
+
+    # ---------------------------------------------------------------- run
+    def run(self, max_steps: int = 100_000) -> List[Completion]:
+        """Step until queue and rows drain; returns completions in finish
+        order."""
+        steps = 0
+        while (self.queue or any(r is not None for r in self.rows)) and steps < max_steps:
+            self.step()
+            steps += 1
+        out, self.done = self.done, []
+        return out

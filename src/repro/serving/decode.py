@@ -67,18 +67,73 @@ def sharded_decode_attention(mesh, q, k_cache, v_cache, k_positions, q_position,
     )(q, k_cache, v_cache, k_positions)
 
 
-def generate(serve_step, params, prompt_caches, first_token, start_pos: int, num_tokens: int, enc_kvs=None):
-    """Greedy generation loop.  Returns (tokens (B, num_tokens), caches)."""
+def generate(
+    serve_step,
+    params,
+    prompt_caches,
+    first_token,
+    start_pos: int,
+    num_tokens: int,
+    enc_kvs=None,
+    *,
+    eos_id=None,
+    max_new_tokens=None,
+    pad_id: int = 0,
+):
+    """Greedy generation loop.  Returns (tokens (B, num_tokens), caches).
 
-    def body(carry, _):
-        token, pos, caches = carry
+    Per-sequence stop handling: once a row emits ``eos_id`` or reaches its
+    ``max_new_tokens`` budget (scalar or per-row ``(B,)``), that row is
+    frozen — subsequent output positions hold ``pad_id`` and the frozen
+    row keeps feeding its last live token so cache writes stay inert for
+    ranking purposes (the scan still runs ``num_tokens`` steps; rows stop
+    independently, the batch shape never changes).  With both ``eos_id``
+    and ``max_new_tokens`` unset this is exactly the unconditional loop.
+    """
+    if eos_id is None and max_new_tokens is None:
+
+        def body(carry, _):
+            token, pos, caches = carry
+            if enc_kvs is None:
+                _, nxt, caches = serve_step(params, token, pos, caches)
+            else:
+                _, nxt, caches = serve_step(params, token, pos, caches, enc_kvs)
+            return (nxt, pos + 1, caches), nxt[:, 0]
+
+        (_, _, caches), toks = jax.lax.scan(
+            body, (first_token, jnp.asarray(start_pos, jnp.int32), prompt_caches), None, length=num_tokens
+        )
+        return toks.swapaxes(0, 1), caches
+
+    batch = first_token.shape[0]
+    budget = None
+    if max_new_tokens is not None:
+        budget = jnp.broadcast_to(jnp.asarray(max_new_tokens, jnp.int32), (batch,))
+
+    def body(carry, step):
+        token, pos, caches, done = carry
         if enc_kvs is None:
             _, nxt, caches = serve_step(params, token, pos, caches)
         else:
             _, nxt, caches = serve_step(params, token, pos, caches, enc_kvs)
-        return (nxt, pos + 1, caches), nxt[:, 0]
+        emitted = jnp.where(done, jnp.asarray(pad_id, nxt.dtype), nxt[:, 0])
+        new_done = done
+        if eos_id is not None:
+            new_done = new_done | (~done & (nxt[:, 0] == eos_id))
+        if budget is not None:
+            new_done = new_done | (step + 1 >= budget)
+        # frozen rows re-feed their previous token (value is irrelevant —
+        # their outputs are masked; keeping shapes fixed avoids recompiles)
+        nxt = jnp.where(done[:, None], token, nxt)
+        return (nxt, pos + 1, caches, new_done), emitted
 
-    (_, _, caches), toks = jax.lax.scan(
-        body, (first_token, jnp.asarray(start_pos, jnp.int32), prompt_caches), None, length=num_tokens
+    init = (
+        first_token,
+        jnp.asarray(start_pos, jnp.int32),
+        prompt_caches,
+        jnp.zeros((batch,), bool),
+    )
+    (_, _, caches, _), toks = jax.lax.scan(
+        body, init, jnp.arange(num_tokens, dtype=jnp.int32)
     )
     return toks.swapaxes(0, 1), caches
