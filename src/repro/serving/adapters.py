@@ -14,12 +14,15 @@ deliberately has no scale operand — see ``kernels/segmented_lora``).  Slot
 writes go through one jitted program whose slot index is *traced*, so
 hot-swapping an adapter into a recycled slot re-runs a compiled scatter —
 pool shapes are static and nothing recompiles.  Eviction is LRU over
-unpinned slots.
+unpinned slots; pins are refcounted so every live request holds its
+adapter's slot (``acquire``/``release``) and eviction can never rewrite a
+slot that a mid-generation row still reads.
 """
 from __future__ import annotations
 
 import os
 from collections import OrderedDict
+from functools import partial
 from typing import Dict, Optional
 
 import jax
@@ -155,10 +158,12 @@ class AdapterRegistry:
         return len(self._entries)
 
 
-@jax.jit
+@partial(jax.jit, donate_argnums=0)
 def _write_slot(pool_tree, padded_tree, slot):
     """Compiled slot write: ``pool[:, slot] = adapter`` on every leaf.
-    ``slot`` is traced — swaps at different slots reuse this compile."""
+    ``slot`` is traced — swaps at different slots reuse this compile.
+    The pool is donated so the scatter updates the buffers in place
+    instead of materializing an O(L*n_slots*K*r_max) copy per swap."""
     return jax.tree.map(
         lambda pool, x: pool.at[:, slot].set(x.astype(pool.dtype)),
         pool_tree,
@@ -184,7 +189,7 @@ class AdapterPoolCache:
             else max(registry.get(n)["rank"] for n in registry.names())
         )
         self._slots: "OrderedDict[str, int]" = OrderedDict()  # name -> slot (LRU order)
-        self._pinned: set = set()
+        self._pins: Dict[str, int] = {}  # name -> refcount (>0 blocks eviction)
         template = registry.get(registry.names()[0])["peft"]
         # pools: same structure as a client tree, every LoRA leaf grows a
         # slot axis after the layer axis: a (L, K, r) -> (L, NS, K, r_max)
@@ -229,7 +234,7 @@ class AdapterPoolCache:
             slot = len(self._slots)
         else:
             victim = next(
-                (n for n in self._slots if n not in self._pinned), None
+                (n for n in self._slots if self._pins.get(n, 0) == 0), None
             )
             if victim is None:
                 raise RuntimeError("all pool slots are pinned; cannot evict")
@@ -242,15 +247,50 @@ class AdapterPoolCache:
         return slot
 
     def lookup(self, names) -> jnp.ndarray:
-        """Row -> slot map for a batch of adapter names, loading as needed."""
-        return jnp.asarray([self.slot_of(n) for n in names], jnp.int32)
+        """Row -> slot map for a batch of adapter names, loading as needed.
+
+        Every distinct name is pinned while the batch resolves, so loading
+        name k+1 can never evict the slot just handed out for name k.  The
+        pins are dropped on return — the map stays valid only until the
+        next adapter load, so callers interleaving loads with use should
+        hold their own ``acquire``/``release`` pins (the batcher does).
+        """
+        distinct = list(dict.fromkeys(names))
+        if len(distinct) > self.n_slots:
+            raise ValueError(
+                f"batch references {len(distinct)} distinct adapters but the "
+                f"pool has only {self.n_slots} slots"
+            )
+        held = []
+        try:
+            for n in distinct:
+                self.pin(n)
+                held.append(n)
+            return jnp.asarray([self._slots[n] for n in names], jnp.int32)
+        finally:
+            for n in held:
+                self.unpin(n)
+
+    def acquire(self, name: str) -> int:
+        """``slot_of`` + a refcounted pin: the slot cannot be evicted until
+        a matching :meth:`release`.  Every live request row must hold one."""
+        slot = self.slot_of(name)
+        self._pins[name] = self._pins.get(name, 0) + 1
+        return slot
+
+    def release(self, name: str):
+        """Drop one ``acquire`` pin; the slot becomes evictable at zero."""
+        count = self._pins.get(name, 0) - 1
+        if count > 0:
+            self._pins[name] = count
+        else:
+            self._pins.pop(name, None)
 
     def pin(self, name: str):
-        self.slot_of(name)
-        self._pinned.add(name)
+        self.acquire(name)
 
     def unpin(self, name: str):
-        self._pinned.discard(name)
+        self.release(name)
 
     # ------------------------------------------------------------- peft
     def pooled_peft(self, row_slots):

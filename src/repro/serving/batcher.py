@@ -132,21 +132,46 @@ class ContinuousBatcher:
     def submit(self, req: Request):
         if not req.prompt:
             raise ValueError("empty prompt")
+        if len(req.prompt) + 1 > self.max_len:
+            # prompt prefill + at least one generated token must fit in the
+            # KV ring, else teacher-forced prefill silently wraps it
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens needs "
+                f"{len(req.prompt) + 1} cache positions but max_len is "
+                f"{self.max_len}"
+            )
         self.queue.append(req)
 
     def _admit(self):
-        """Fill free rows from the queue; reset recycled rows' positions."""
+        """Fill free rows from the queue; reset recycled rows' positions.
+
+        Each admitted row ``acquire``s its adapter, holding the pool slot
+        until the row completes — eviction can never rewrite a slot a live
+        row still decodes with.  A request whose adapter cannot be loaded
+        yet (every slot pinned by live rows) stays queued; later queued
+        requests whose adapters are already resident may admit ahead of it.
+        """
         freed = np.zeros((self.batch,), bool)
         for i in range(self.batch):
-            if self.rows[i] is None and self.queue:
-                req = self.queue.pop(0)
-                slot = self.pool.slot_of(req.adapter)
-                self.rows[i] = _Row(
+            if self.rows[i] is not None or not self.queue:
+                continue
+            admitted = None
+            for qi, req in enumerate(self.queue):
+                try:
+                    slot = self.pool.acquire(req.adapter)
+                except RuntimeError:
+                    continue  # all slots held by live rows; leave queued
+                admitted = _Row(
                     req=req, remaining_prompt=list(req.prompt), slot=slot
                 )
-                self._tokens[i] = self.rows[i].remaining_prompt.pop(0)
-                self._pos[i] = 0
-                freed[i] = True
+                self.queue.pop(qi)
+                break
+            if admitted is None:
+                break  # nothing admissible until a live row releases a pin
+            self.rows[i] = admitted
+            self._tokens[i] = admitted.remaining_prompt.pop(0)
+            self._pos[i] = 0
+            freed[i] = True
         if freed.any():
             self.caches = _reset_rows(self.caches, jnp.asarray(freed))
 
@@ -190,6 +215,7 @@ class ContinuousBatcher:
                         finish_reason="eos" if hit_eos else "length",
                     )
                 )
+                self.pool.release(row.req.adapter)
                 self.rows[i] = None  # row recycles next _admit()
                 self._tokens[i] = self.pad_id
                 self._pos[i] = 0
@@ -200,10 +226,25 @@ class ContinuousBatcher:
     # ---------------------------------------------------------------- run
     def run(self, max_steps: int = 100_000) -> List[Completion]:
         """Step until queue and rows drain; returns completions in finish
-        order."""
+        order.  Raises rather than silently dropping work: if ``max_steps``
+        is exhausted with requests still in flight, or the queue cannot
+        make progress (every pool slot pinned outside the batcher), every
+        submitted-but-unfinished request would otherwise vanish."""
         steps = 0
         while (self.queue or any(r is not None for r in self.rows)) and steps < max_steps:
-            self.step()
+            if not self.step() and self.queue:
+                raise RuntimeError(
+                    f"{len(self.queue)} queued request(s) cannot be "
+                    f"admitted: all {self.pool.n_slots} pool slots are "
+                    f"pinned outside the batcher"
+                )
             steps += 1
+        live = sum(r is not None for r in self.rows)
+        if self.queue or live:
+            raise RuntimeError(
+                f"run() exhausted max_steps={max_steps} with {live} live "
+                f"row(s) and {len(self.queue)} queued request(s) — their "
+                f"completions were never emitted"
+            )
         out, self.done = self.done, []
         return out

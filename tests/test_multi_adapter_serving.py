@@ -134,10 +134,15 @@ def test_batched_mixed_adapters_match_per_request_switching(key):
         assert done[j].finish_reason == ref.finish_reason
 
 
-def test_hot_swap_mid_generation_matches_solo(key):
+@pytest.mark.parametrize("budgets", [(2, 8), (8, 2)])
+def test_hot_swap_mid_generation_matches_solo(key, budgets):
     """3 tenants through a 2-slot pool at batch 2: admitting the queued
     third request evicts a slot (hot-swap) while the other row is still
-    generating — neither request's tokens may change vs running alone."""
+    generating — neither request's tokens may change vs running alone.
+
+    Both budget orders matter: with ``(8, 2)`` the LONG-running row's
+    adapter is the LRU-order eviction candidate when t2 admits, so only
+    live-row pinning keeps the mid-generation row on its own weights."""
     cfg, params, trees = _two_tenant_setup(key)
     reg = AdapterRegistry()
     for i in range(3):
@@ -155,8 +160,8 @@ def test_hot_swap_mid_generation_matches_solo(key):
         return {c.uid: c.tokens for c in b.run()}, pool.swaps
 
     reqs = [
-        Request(prompt=[5, 7], adapter="t0", max_new_tokens=2, uid=0),
-        Request(prompt=[11, 13], adapter="t1", max_new_tokens=8, uid=1),
+        Request(prompt=[5, 7], adapter="t0", max_new_tokens=budgets[0], uid=0),
+        Request(prompt=[11, 13], adapter="t1", max_new_tokens=budgets[1], uid=1),
         Request(prompt=[17, 19], adapter="t2", max_new_tokens=3, uid=2),
     ]
     got, swaps = serve_all(reqs, batch=2)
@@ -167,6 +172,78 @@ def test_hot_swap_mid_generation_matches_solo(key):
                      max_new_tokens=r.max_new_tokens, uid=r.uid)], batch=2
         )
         assert got[r.uid] == solo[r.uid], r.uid
+
+
+def test_admission_defers_until_slot_free(key):
+    """batch > n_slots with all-distinct adapters: the third request must
+    wait in the queue (not evict a live row's slot) and admit only after a
+    completion releases its pin — tokens still match running alone."""
+    cfg, params, trees = _two_tenant_setup(key)
+    reg = AdapterRegistry()
+    for i in range(3):
+        reg.register(f"t{i}", trees[f"client{i % 2}"])
+    serve = make_serve_step(cfg, stack_mode="scan")
+
+    def serve_all(requests):
+        pool = AdapterPoolCache(reg, n_slots=2)
+        b = ContinuousBatcher(
+            serve, params, cfg, pool, batch=3, max_len=16,
+            cache_dtype=jnp.float32,
+        )
+        for r in requests:
+            b.submit(r)
+        return {c.uid: c.tokens for c in b.run()}
+
+    reqs = [
+        Request(prompt=[5, 7], adapter="t0", max_new_tokens=6, uid=0),
+        Request(prompt=[11, 13], adapter="t1", max_new_tokens=2, uid=1),
+        Request(prompt=[17, 19], adapter="t2", max_new_tokens=3, uid=2),
+    ]
+    got = serve_all(reqs)
+    assert len(got) == 3
+    for r in reqs:
+        solo = serve_all([Request(prompt=r.prompt, adapter=r.adapter,
+                                  max_new_tokens=r.max_new_tokens, uid=r.uid)])
+        assert got[r.uid] == solo[r.uid], r.uid
+
+
+def test_batcher_guards(key):
+    """submit() rejects prompts that would wrap the KV ring; run() raises
+    instead of silently dropping in-flight work on step-budget exhaustion
+    or a queue stalled by external pins; lookup() rejects more distinct
+    adapters than slots."""
+    cfg, params, trees = _two_tenant_setup(key, num_layers=1)
+    reg = AdapterRegistry()
+    for i in range(3):
+        reg.register(f"t{i}", trees[f"client{i % 2}"])
+    serve = make_serve_step(cfg, stack_mode="scan")
+
+    def make(pool):
+        return ContinuousBatcher(
+            serve, params, cfg, pool, batch=2, max_len=8,
+            cache_dtype=jnp.float32,
+        )
+
+    b = make(AdapterPoolCache(reg, n_slots=2))
+    with pytest.raises(ValueError, match="cache positions"):
+        b.submit(Request(prompt=list(range(8)), adapter="t0"))
+
+    b.submit(Request(prompt=[3, 5], adapter="t0", max_new_tokens=4, uid=0))
+    with pytest.raises(RuntimeError, match="max_steps"):
+        b.run(max_steps=1)
+
+    pool = AdapterPoolCache(reg, n_slots=2)
+    pool.pin("t0")
+    pool.pin("t1")
+    b2 = make(pool)
+    b2.submit(Request(prompt=[3, 5], adapter="t2", max_new_tokens=2, uid=0))
+    with pytest.raises(RuntimeError, match="pinned"):
+        b2.run()
+    pool.unpin("t0")
+    assert len(b2.run()) == 1  # releasing a pin unblocks the queue
+
+    with pytest.raises(ValueError, match="distinct adapters"):
+        pool.lookup(["t0", "t1", "t2"])
 
 
 def test_checkpoint_roundtrip_identical_logits(key, tmp_path):
