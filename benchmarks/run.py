@@ -13,6 +13,7 @@ import traceback
 
 from benchmarks import (
     cohort_bench,
+    faults_bench,
     round_bench,
     schedule_bench,
     fig2_breakdown,
@@ -31,6 +32,7 @@ from benchmarks import (
 
 BENCHES = {
     "cohort": cohort_bench.run,
+    "faults": faults_bench.run,
     "round": round_bench.run,
     "schedule": schedule_bench.run,
     "serve": serve_bench.run,

@@ -235,6 +235,21 @@ def flat_bytes() -> List[Violation]:
     ]
 
 
+@_fixture("finite-guard")
+def unguarded_aggregation() -> List[Violation]:
+    """An aggregation body with the screening guard deleted — a NaN client
+    update would average straight into the global PEFT."""
+    n, d = 3, 8
+    clients = [{"a": jnp.ones((d,)), "b": jnp.ones((d,))} for _ in range(n)]
+
+    def naive_fedavg(trees):
+        return jax.tree.map(lambda *xs: sum(xs) / len(xs), *trees)
+
+    closed = jax.make_jaxpr(naive_fedavg)(clients)
+    trace = contracts.make_trace("fixture/finite-guard", closed)
+    return contracts.check_finite_guard(trace)
+
+
 # -------------------------------------------------------- recompile fixture
 @_fixture("recompile")
 def static_arg_churn() -> List[Violation]:

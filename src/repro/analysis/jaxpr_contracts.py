@@ -21,6 +21,10 @@ cost-scaling contracts:
                   with the STLD active fraction in gather mode.
 ``bytes-linear``  XLA ``cost_analysis()`` bytes-accessed scales linearly
                   with the active fraction.
+``finite-guard``  every traced aggregation program must contain the
+                  ``is_finite`` screening guard (``server.screen_finite``)
+                  — the in-graph defense that keeps a corrupted client
+                  update from poisoning the global PEFT.
 
 FLOPs come from :func:`estimate_flops`, a scan-length-aware jaxpr walker —
 XLA's own HLO cost analysis counts a ``scan`` body once regardless of trip
@@ -106,6 +110,13 @@ CONTRACT_RULES: Dict[str, ContractRule] = {
             "per-layer params are touched even for dropped layers; gather "
             "the k active layers before the scan instead of masking after",
         ),
+        ContractRule(
+            "finite-guard",
+            "traced aggregation must contain the non-finite screening guard",
+            "route the aggregated tree through server.screen_finite (or an "
+            "equivalent jnp.isfinite select) as the last step of the traced "
+            "aggregation body",
+        ),
     )
 }
 
@@ -115,6 +126,7 @@ ALLOWLIST: Dict[str, Dict[str, str]] = {
     "restack": {},
     "dtype64": {},
     "callback": {},
+    "finite-guard": {},
 }
 
 
@@ -303,6 +315,27 @@ def check_trace_rules(trace: ProgramTrace) -> List[Violation]:
                 )
             )
     return out
+
+
+def check_finite_guard(trace: ProgramTrace) -> List[Violation]:
+    """finite-guard: unlike the structural *absence* rules, this one
+    requires a primitive to be *present* — at least one ``is_finite`` eqn
+    (the lowering of ``jnp.isfinite`` inside ``server.screen_finite``)
+    anywhere in the traced aggregation program."""
+    if allowlisted("finite-guard", trace.where):
+        return []
+    for eqn in walk_eqns(trace.jaxpr):
+        if eqn.primitive.name == "is_finite":
+            return []
+    return [
+        Violation(
+            "finite-guard", trace.where,
+            "no is_finite primitive anywhere in the traced aggregation "
+            "program: a non-finite client update would flow straight into "
+            "the global PEFT",
+            CONTRACT_RULES["finite-guard"].hint,
+        )
+    ]
 
 
 def check_leaf_budget(trace: ProgramTrace, trace_2l: ProgramTrace) -> List[Violation]:
@@ -631,9 +664,9 @@ def check_algorithms(
                 where=f"{name}/client_step",
             )
         )
-        violations += check_trace_rules(
-            aggregation_trace(_merge_family(name), where=f"{name}/aggregate")
-        )
+        agg_tr = aggregation_trace(_merge_family(name), where=f"{name}/aggregate")
+        violations += check_trace_rules(agg_tr)
+        violations += check_finite_guard(agg_tr)
     if include_decode:
         if progress:
             progress("serving/decode")

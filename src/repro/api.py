@@ -114,6 +114,9 @@ def build(
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 1,
     resume: bool = False,
+    # fault injection: a FaultPlan, a kwargs dict, or a JSON-file path
+    # (see repro.federated.faults); None runs fault-free
+    fault_plan=None,
 ) -> ExperimentRunner:
     """Construct a fully-wired :class:`ExperimentRunner` (does not run it)."""
     if cfg is None:
@@ -161,6 +164,7 @@ def build(
         checkpoint_dir=checkpoint_dir,
         checkpoint_every=checkpoint_every,
         resume=resume,
+        fault_plan=fault_plan,
     )
 
 

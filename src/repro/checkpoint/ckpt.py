@@ -3,16 +3,75 @@
 Layout: ``<dir>/step_<n>/manifest.json`` + ``arrays.npz``.  Leaves are
 addressed by their flattened key-path string, so any nested dict/list/tuple
 pytree round-trips exactly (structure + dtypes + shapes).
+
+Writes are atomic: each snapshot is staged in a ``.tmp-`` sibling directory
+and renamed into place with ``os.replace`` only after every file landed, so
+a crash mid-save leaves either the previous complete snapshot or a stale
+temp dir — never a half-written ``step_*``.  Readers
+(:func:`latest_state_dir` / :func:`restore_latest`) additionally validate
+each candidate and fall back to the newest *complete* snapshot, so even a
+torn directory produced by a pre-atomic writer (or a filesystem that lost
+the rename) cannot poison resume.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import shutil
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+def _commit_dir(directory: str, step: int, write_files) -> str:
+    """Atomically materialize ``<directory>/step_<step>``.
+
+    ``write_files(tmp_dir)`` stages every file; the staged dir is then
+    renamed over the final path.  ``os.replace`` cannot overwrite a
+    non-empty directory, so an existing snapshot for the same step is
+    removed first — worst case a crash between the two calls loses only
+    that one step and resume falls back to the previous snapshot.
+    """
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = os.path.join(directory, f".tmp-step_{step:08d}")
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    write_files(tmp)
+    if os.path.isdir(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def _snapshot_ok(path: str) -> bool:
+    """True when ``path`` holds a complete, loadable snapshot: the manifest
+    parses and the npz central directory is intact (a truncated write fails
+    both cheaply, without loading array payloads)."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            data.files  # noqa: B018 — forces the zip directory read
+        return True
+    except Exception:
+        return False
+
+
+def _complete_steps(directory: str):
+    """Step numbers under ``directory`` whose snapshots validate, ascending
+    (partial/corrupt dirs are skipped, not fatal)."""
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and _snapshot_ok(os.path.join(directory, name)):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
 
 
 def _path_str(path) -> str:
@@ -28,8 +87,6 @@ def _path_str(path) -> str:
 
 
 def save_pytree(tree: Any, directory: str, step: int) -> str:
-    out_dir = os.path.join(directory, f"step_{step:08d}")
-    os.makedirs(out_dir, exist_ok=True)
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
     arrays = {}
     manifest = {"step": step, "leaves": []}
@@ -43,10 +100,13 @@ def save_pytree(tree: Any, directory: str, step: int) -> str:
         manifest["leaves"].append({"key": key, "path": _path_str(path), "dtype": dtype_name})
     treedef = jax.tree.structure(tree)
     manifest["treedef"] = str(treedef)
-    np.savez(os.path.join(out_dir, "arrays.npz"), **arrays)
-    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=2)
-    return out_dir
+
+    def write(tmp_dir):
+        np.savez(os.path.join(tmp_dir, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+
+    return _commit_dir(directory, step, write)
 
 
 def load_pytree(template: Any, checkpoint_dir: str) -> Any:
@@ -69,17 +129,15 @@ def load_pytree(template: Any, checkpoint_dir: str) -> Any:
 
 
 def restore_latest(template: Any, directory: str) -> Optional[tuple]:
-    """(tree, step) from the newest ``step_*`` subdir, or None."""
-    if not os.path.isdir(directory):
-        return None
-    steps = []
-    for name in os.listdir(directory):
-        m = re.fullmatch(r"step_(\d+)", name)
-        if m:
-            steps.append(int(m.group(1)))
+    """(tree, step) from the newest *complete* ``step_*`` subdir, or None.
+
+    Partial or corrupt snapshots (crash mid-save before atomic writes, torn
+    copies) are skipped, so restore degrades to the previous good step
+    instead of raising on a broken newest one."""
+    steps = _complete_steps(directory)
     if not steps:
         return None
-    step = max(steps)
+    step = steps[-1]
     tree = load_pytree(template, os.path.join(directory, f"step_{step:08d}"))
     return tree, step
 
@@ -131,17 +189,18 @@ def _unskeletonize(skel: dict, data) -> Any:
 
 def save_state(directory: str, step: int, tree: Any, meta: Any = None) -> str:
     """Save a nested dict/list/tuple of arrays + a JSON ``meta`` payload."""
-    out_dir = os.path.join(directory, f"step_{step:08d}")
-    os.makedirs(out_dir, exist_ok=True)
     leaves: list = []
     skeleton = _skeletonize(tree, leaves)
-    np.savez(
-        os.path.join(out_dir, "arrays.npz"),
-        **{f"leaf_{i}": arr for i, arr in enumerate(leaves)},
-    )
-    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
-        json.dump({"step": step, "skeleton": skeleton, "meta": meta}, f, indent=2)
-    return out_dir
+
+    def write(tmp_dir):
+        np.savez(
+            os.path.join(tmp_dir, "arrays.npz"),
+            **{f"leaf_{i}": arr for i, arr in enumerate(leaves)},
+        )
+        with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+            json.dump({"step": step, "skeleton": skeleton, "meta": meta}, f, indent=2)
+
+    return _commit_dir(directory, step, write)
 
 
 def load_state(checkpoint_dir: str) -> tuple:
@@ -153,14 +212,10 @@ def load_state(checkpoint_dir: str) -> tuple:
 
 
 def latest_state_dir(directory: str) -> Optional[str]:
-    """Path of the newest ``step_*`` checkpoint under ``directory``, or None."""
-    if not os.path.isdir(directory):
-        return None
-    steps = []
-    for name in os.listdir(directory):
-        m = re.fullmatch(r"step_(\d+)", name)
-        if m:
-            steps.append(int(m.group(1)))
+    """Path of the newest *complete* ``step_*`` checkpoint under
+    ``directory``, or None.  A truncated or corrupt newest snapshot (crash
+    mid-save) is skipped in favor of the previous valid one."""
+    steps = _complete_steps(directory)
     if not steps:
         return None
-    return os.path.join(directory, f"step_{max(steps):08d}")
+    return os.path.join(directory, f"step_{steps[-1]:08d}")

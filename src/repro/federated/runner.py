@@ -30,6 +30,7 @@ from repro.core import peft as peft_lib
 from repro.data import DeviceDataset, dirichlet_partition, make_task
 from repro.federated.algorithms import FederatedAlgorithm, get_algorithm
 from repro.federated.engine import CohortEngine
+from repro.federated.faults import FaultInjector, resolve_fault_plan
 from repro.federated.scheduler import (
     ScheduleConfig,
     VirtualClockScheduler,
@@ -176,6 +177,7 @@ class ExperimentRunner:
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 1,
         resume: bool = False,
+        fault_plan=None,
     ):
         if isinstance(algorithm, str):
             algorithm = get_algorithm(algorithm)()
@@ -185,13 +187,7 @@ class ExperimentRunner:
             algorithm = fresh_algorithm(algorithm)
         self.algorithm = algorithm
         self.schedule = resolve_schedule(schedule)
-        if checkpoint_dir and self.schedule.keeps_in_flight_state:
-            raise ValueError(
-                f"checkpointing is not supported with "
-                f"policy={self.schedule.policy!r}/straggler="
-                f"{self.schedule.straggler!r}: in-flight updates live across "
-                "aggregation boundaries and cannot be serialized"
-            )
+        self.fault_plan = resolve_fault_plan(fault_plan)
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = max(1, checkpoint_every)
 
@@ -227,7 +223,15 @@ class ExperimentRunner:
             rng=rng,
             configurator=algorithm.build_configurator(ctx),
         )
-        self.scheduler = VirtualClockScheduler(self, self.schedule)
+        self.scheduler = VirtualClockScheduler(
+            self,
+            self.schedule,
+            faults=(
+                FaultInjector(self.fault_plan)
+                if self.fault_plan is not None
+                else None
+            ),
+        )
         if resume:
             if not checkpoint_dir:
                 raise ValueError("resume=True requires checkpoint_dir")
@@ -265,9 +269,19 @@ class ExperimentRunner:
         return res
 
     # --------------------------------------------------------- checkpointing
+    # Checkpoint meta versions:
+    #   1 (implicit; pre-durability) — round state only, no in-flight
+    #     scheduler section.  Still loads under policies that never keep
+    #     updates across aggregation boundaries (sync, deadline+drop).
+    #   2 — adds "scheduler" (in-flight jobs, event/fault logs, retry
+    #     bookkeeping) + "fault_plan", making async-buffer and
+    #     deadline+carry resumable bit-exactly.
+    CKPT_META_VERSION = 2
+
     def save_checkpoint(self) -> str:
         """Persist the full round state; a resumed run is bit-identical."""
         state = self.state
+        sched_jobs, sched_meta = self.scheduler.state_dict()
         arrays = {
             "key": np.asarray(state.key),
             "global_peft": state.global_peft,
@@ -275,8 +289,14 @@ class ExperimentRunner:
             "last_mask": {
                 str(d): np.asarray(m) for d, m in sorted(state.last_mask.items())
             },
+            "scheduler_jobs": sched_jobs,
         }
         meta = {
+            "meta_version": self.CKPT_META_VERSION,
+            "scheduler": sched_meta,
+            "fault_plan": (
+                None if self.fault_plan is None else self.fault_plan.to_json()
+            ),
             "round_index": state.round_index,
             "global_step": state.global_step,
             "cum_time": state.cum_time,
@@ -313,6 +333,18 @@ class ExperimentRunner:
             return  # nothing saved yet: fresh start
         arrays, meta = ckpt_lib.load_state(latest)
         state = self.state
+        sched_meta = meta.get("scheduler")
+        if sched_meta is None and self.schedule.keeps_in_flight_state:
+            raise ValueError(
+                f"checkpoint at {latest} predates durable in-flight state "
+                f"(meta version {meta.get('meta_version', 1)}; this runner "
+                f"writes version {self.CKPT_META_VERSION}) and cannot resume "
+                f"under policy={self.schedule.policy!r}/straggler="
+                f"{self.schedule.straggler!r}, which keeps updates in flight "
+                "across aggregation boundaries.  Resume it under "
+                "schedule='sync' or deadline+drop, or re-run from scratch to "
+                "produce a current-version snapshot."
+            )
         if len(meta["device_rng"]) != len(self.ctx.devices):
             raise ValueError(
                 f"checkpoint at {latest} was saved with "
@@ -350,6 +382,10 @@ class ExperimentRunner:
             configurator=configurator,
             history=tuple(meta["history"]),
         )
+        if sched_meta is not None:
+            self.scheduler.load_state_dict(
+                arrays.get("scheduler_jobs", []), sched_meta
+            )
 
 
 def run_replicates(

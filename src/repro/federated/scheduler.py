@@ -46,8 +46,10 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 from repro.federated import server as server_lib
+from repro.federated.faults import FaultInjector, ServerKilled
 from repro.federated.state import CohortResults, RoundPlan
 from repro.federated.system_model import SystemModel
 
@@ -79,8 +81,12 @@ class ScheduleConfig:
 
     @property
     def keeps_in_flight_state(self) -> bool:
-        """True when updates may live across aggregation boundaries (these
-        policies cannot checkpoint/resume mid-run)."""
+        """True when updates may live across aggregation boundaries.
+
+        These policies checkpoint their in-flight jobs through the
+        scheduler's ``state_dict`` (meta version >= 2); a pre-durability
+        snapshot (meta version 1, no in-flight section) cannot resume under
+        them — the runner raises an actionable error instead."""
         return self.policy == "async-buffer" or (
             self.policy == "deadline" and self.straggler == "carry"
         )
@@ -188,10 +194,28 @@ class _Job:
     energy_j: float
     traffic_mb: float
     memory_gb: float
+    failed: bool = False    # client dropped mid-round (fault injection)
 
     @property
     def order_key(self) -> Tuple[int, int]:
         return (self.dispatch_round, self.cohort_pos)
+
+
+def _tree_finite(tree) -> bool:
+    """Host-side check that every leaf of ``tree`` is finite."""
+    return all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(tree))
+
+
+# the _Job scalar fields that ride the JSON checkpoint manifest, with the
+# coercion applied on both the save and load sides (state_dict /
+# load_state_dict) so the two can never drift apart
+_JOB_SCALARS = (
+    ("dev", int), ("rate", float), ("version", int), ("dispatch_round", int),
+    ("cohort_pos", int), ("dispatch_time", float), ("duration", float),
+    ("finish", float), ("accuracy", float), ("active_frac", float),
+    ("compute_s", float), ("comm_s", float), ("energy_j", float),
+    ("traffic_mb", float), ("memory_gb", float), ("failed", bool),
+)
 
 
 class VirtualClockScheduler:
@@ -205,12 +229,21 @@ class VirtualClockScheduler:
     identical across runs and across batched/sequential cohort modes.
     """
 
-    def __init__(self, runner, cfg: Optional[ScheduleConfig] = None):
+    def __init__(
+        self,
+        runner,
+        cfg: Optional[ScheduleConfig] = None,
+        faults: Optional[FaultInjector] = None,
+    ):
         self.runner = runner
         self.cfg = cfg or getattr(runner, "schedule", None) or ScheduleConfig()
+        self.faults = faults
         self.event_log: List[Tuple[int, int, float]] = []
+        self.fault_log: List[dict] = []            # rejected updates + billing
         self._heap: List[Tuple[float, int]] = []   # (finish_time, dev)
         self._jobs: Dict[int, _Job] = {}
+        self._backoff: Dict[int, float] = {}       # dev -> earliest re-dispatch t
+        self._fail_count: Dict[int, int] = {}      # dev -> consecutive failures
 
     # ------------------------------------------------------------ public api
     @property
@@ -225,17 +258,33 @@ class VirtualClockScheduler:
             "deadline": self._deadline_round,
             "async-buffer": self._async_step,
         }[self.cfg.policy]
+        if self.faults is not None and self.cfg.policy == "sync":
+            # the barrier path has no dispatch/arrival machinery to inject
+            # into; an infinite-deadline drop round is bit-identical to sync
+            # (test_schedule_parity) and routes every completion through the
+            # fault-aware event loop
+            step = self._deadline_round
         while runner.state.round_index < total:
             row = step(total, target_accuracy)
             hit_target = (
                 target_accuracy is not None and row["acc"] >= target_accuracy
             )
-            if runner.checkpoint_dir and not self.cfg.keeps_in_flight_state and (
+            if runner.checkpoint_dir and (
                 runner.state.round_index % runner.checkpoint_every == 0
                 or runner.state.round_index == total
                 or hit_target
             ):
                 runner.save_checkpoint()
+            if self.faults is not None and self.faults.kills_after(
+                runner.state.round_index
+            ):
+                # the crash-restart drill: the checkpoint (if configured)
+                # is already durably renamed into place
+                raise ServerKilled(
+                    f"fault plan kills the server after round "
+                    f"{runner.state.round_index}; rebuild the runner with "
+                    "resume=True to continue from the newest checkpoint"
+                )
             if hit_target:
                 break
         return runner.result()
@@ -274,13 +323,14 @@ class VirtualClockScheduler:
         hook with the old one-argument signature still works whenever no
         kwarg is actually needed (sync and deadline-drop), and gets an
         actionable error instead of a bare TypeError otherwise."""
+        excl = self._dispatch_exclusions()
         params = inspect.signature(algo.configure_round).parameters
         accepts_kwargs = any(
             p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
         ) or ("size" in params and "exclude" in params)
         if accepts_kwargs:
-            return algo.configure_round(state, size=size, exclude=self.in_flight)
-        if size is None and not self._jobs:
+            return algo.configure_round(state, size=size, exclude=excl)
+        if size is None and not excl:
             return algo.configure_round(state)
         raise TypeError(
             f"{type(algo).__name__}.configure_round(state) must accept "
@@ -288,6 +338,75 @@ class VirtualClockScheduler:
             f"{self.cfg.policy!r} policy with in-flight updates — see "
             "FederatedAlgorithm.configure_round"
         )
+
+    def _dispatch_exclusions(self) -> frozenset:
+        """Devices that cannot be dispatched at the current virtual time:
+        in flight, backing off after a fault, or churned out of the
+        population.  Expired backoffs are purged here, so a recovered
+        device re-enters the pool exactly at its retry instant."""
+        if self.faults is None:
+            return self.in_flight
+        t = self.runner.state.virtual_time
+        for dev in [d for d, ready in self._backoff.items() if ready <= t]:
+            del self._backoff[dev]
+        excl = set(self._jobs) | set(self._backoff)
+        for dev in range(self.runner.ctx.fed_cfg.num_devices):
+            if self.faults.unavailable(dev, t):
+                excl.add(dev)
+        return frozenset(excl)
+
+    def _next_available_time(self, t: float) -> Optional[float]:
+        """Earliest virtual instant strictly after ``t`` when a currently
+        excluded device becomes dispatchable (backoff expiry or churn
+        rejoin), or None when no such instant exists.  The deadline-aware
+        fallback idle-advances the clock here instead of stalling when a
+        faulted cohort leaves nothing dispatchable and nothing in flight."""
+        times = [ready for ready in self._backoff.values() if ready > t]
+        if self.faults is not None:
+            for dev in range(self.runner.ctx.fed_cfg.num_devices):
+                if dev in self._jobs:
+                    continue
+                rejoin = self.faults.next_rejoin(dev, t)
+                if rejoin is not None and rejoin > t:
+                    times.append(rejoin)
+        return min(times) if times else None
+
+    def _inject_dispatch_faults(self, job: _Job) -> None:
+        """Mutate a freshly-dispatched job per the fault plan: stretch its
+        uplink (bandwidth collapse), truncate it at the dropout instant
+        (partial work billed, update lost), or corrupt its update to NaN.
+        Only the virtual-clock trajectory and billing change — the
+        training RNG streams are untouched, so devices unaffected by any
+        fault compute bit-identical updates."""
+        inj = self.faults
+        r, dev = job.dispatch_round, job.dev
+        bw = inj.bandwidth_factor_at(r, dev)
+        if bw > 1.0:
+            extra = job.comm_s * (bw - 1.0)
+            job.comm_s *= bw
+            job.duration += extra
+            self.fault_log.append(
+                {
+                    "round": r,
+                    "dev": dev,
+                    "reason": "bandwidth-collapse",
+                    "time": job.dispatch_time,
+                    "slowdown": bw,
+                }
+            )
+        frac = inj.dropout_at(r, dev)
+        if frac is not None:
+            # the client vanishes after completing `frac` of its round: all
+            # billed quantities scale down, the update never arrives intact
+            job.failed = True
+            job.duration *= frac
+            job.compute_s *= frac
+            job.comm_s *= frac
+            job.energy_j *= frac
+            job.traffic_mb *= frac
+        if inj.corrupts(r, dev):
+            job.peft = jax.tree.map(lambda x: jnp.full_like(x, jnp.nan), job.peft)
+        job.finish = job.dispatch_time + job.duration
 
     def _dispatch(self, size: Optional[int] = None) -> Tuple[Optional[RoundPlan], List[_Job]]:
         """Sample + train a cohort at the current virtual time and push its
@@ -336,6 +455,8 @@ class VirtualClockScheduler:
                 traffic_mb=traffic_mb[i],
                 memory_gb=memory_gb[i],
             )
+            if self.faults is not None:
+                self._inject_dispatch_faults(job)
             jobs.append(job)
             self._jobs[dev] = job
             heapq.heappush(self._heap, (job.finish, dev))
@@ -360,6 +481,47 @@ class VirtualClockScheduler:
             arrived.append(job)
             self.event_log.append((round_index, dev, finish))
         return arrived
+
+    def _screen(self, arrived: List[_Job], round_index: int) -> List[_Job]:
+        """Graceful-degradation gate between arrival and aggregation.
+
+        Partitions arrivals into accepted and rejected: a dropped client
+        never delivered its update, and a delivered-but-non-finite update
+        is screened out before it can poison the global PEFT.  Rejected
+        work stays billed (the compute was burned — ``_row`` bills every
+        dispatched job), the rejection is recorded in ``fault_log``, and a
+        dropped device re-enters the dispatch pool only after an
+        exponential virtual-time backoff.  With no injector attached this
+        is the identity, and with a zero-fault plan no job is ever
+        rejected — both bit-transparent."""
+        if self.faults is None:
+            return arrived
+        ok = []
+        for job in sorted(arrived, key=lambda j: j.order_key):
+            if job.failed:
+                reason = "dropout"
+            elif not _tree_finite(job.peft):
+                reason = "non-finite-update"
+            else:
+                self._fail_count.pop(job.dev, None)
+                ok.append(job)
+                continue
+            entry = {
+                "round": round_index,
+                "dev": job.dev,
+                "reason": reason,
+                "time": job.finish,
+                "burned_compute_s": job.compute_s,
+                "burned_energy_j": job.energy_j,
+            }
+            if reason == "dropout":
+                n = self._fail_count.get(job.dev, 0) + 1
+                self._fail_count[job.dev] = n
+                retry_at = job.finish + self.faults.backoff_s(n)
+                self._backoff[job.dev] = retry_at
+                entry["retry_after"] = retry_at
+            self.fault_log.append(entry)
+        return ok
 
     # ----------------------------------------------------------- aggregation
     def _aggregate_arrivals(self, arrived: List[_Job], adaopt_depth: int):
@@ -411,13 +573,22 @@ class VirtualClockScheduler:
         t0 = runner.state.virtual_time
         round_index = runner.state.round_index
         plan, jobs = self._dispatch()
-        state = runner.state
 
-        if not self._jobs:
-            raise RuntimeError(
-                "deadline scheduler has no dispatchable devices and nothing "
-                "in flight — num_devices is too small for the carry backlog"
-            )
+        while not self._jobs:
+            # deadline-aware fallback: every device is backing off or
+            # churned out and nothing is in flight — idle-advance the
+            # virtual clock to the next availability instant instead of
+            # stalling the queue
+            nxt = self._next_available_time(runner.state.virtual_time)
+            if nxt is None:
+                raise RuntimeError(
+                    "deadline scheduler has no dispatchable devices and nothing "
+                    "in flight — num_devices is too small for the carry backlog"
+                )
+            runner.state = replace(runner.state, virtual_time=nxt)
+            t0 = nxt
+            plan, jobs = self._dispatch()
+        state = runner.state
         # close the window: min(deadline, everyone-done), never before the
         # first arrival (a too-tight deadline must still make progress)
         max_fin = max(j.finish for j in self._jobs.values())
@@ -431,26 +602,32 @@ class VirtualClockScheduler:
             # cut-off updates are discarded; their devices free up next round
             self._heap.clear()
             self._jobs.clear()
+        ok = self._screen(arrived, round_index)
 
-        arrived_devs = {j.dev for j in arrived}
+        arrived_devs = {j.dev for j in ok}
         state, agg_results = self._aggregate_arrivals(
-            arrived, plan.adaopt_depth if plan else ctx.cfg.num_layers
+            ok, plan.adaopt_depth if plan else ctx.cfg.num_layers
         )
 
         if cfg.straggler == "carry":
             # carried updates are never lost, so bandit feedback waits for
-            # the landing: every arrival (on-time or late) reports its full
-            # realized duration and trained accuracy — a slow low-dropout
-            # arm whose carried updates drive gains is credited, not
-            # zeroed.  agg_results already holds the arrivals in dispatch
-            # order (its plan cohort/rates match the durations below).
-            ordered = sorted(arrived, key=lambda j: j.order_key)
-            prev_acc = self._feedback_and_prev_acc(
-                state,
-                agg_results,
-                np.asarray([j.duration for j in ordered], dtype=np.float64),
-                arrived,
-            )
+            # the landing: every accepted arrival (on-time or late) reports
+            # its full realized duration and trained accuracy — a slow
+            # low-dropout arm whose carried updates drive gains is
+            # credited, not zeroed.  agg_results already holds the
+            # arrivals in dispatch order (its plan cohort/rates match the
+            # durations below).  Rejected arrivals carry no usable update
+            # and no trained accuracy, so they give the bandit nothing.
+            if agg_results is not None:
+                ordered = sorted(ok, key=lambda j: j.order_key)
+                prev_acc = self._feedback_and_prev_acc(
+                    state,
+                    agg_results,
+                    np.asarray([j.duration for j in ordered], dtype=np.float64),
+                    ok,
+                )
+            else:  # every arrival this window was screened out
+                prev_acc = state.prev_acc
         else:
             # drop frees every device each round, so a dispatch plan always
             # exists; feedback covers this round's *dispatched* cohort —
@@ -476,12 +653,12 @@ class VirtualClockScheduler:
                 masks=np.stack([j.mask for j in jobs]),
             )
             prev_acc = self._feedback_and_prev_acc(
-                state, fb_results, np.asarray(realized, dtype=np.float64), arrived
+                state, fb_results, np.asarray(realized, dtype=np.float64), ok
             )
 
         row = self._row(
             close_t,
-            arrived=sorted(arrived, key=lambda j: j.order_key),
+            arrived=sorted(ok, key=lambda j: j.order_key),
             dispatched=jobs,
         )
         state = replace(
@@ -503,19 +680,37 @@ class VirtualClockScheduler:
         if not self._jobs:
             # prime the pipeline: fill concurrency = devices_per_round
             self._dispatch(size=fed.devices_per_round)
+        while not self._jobs:
+            # deadline-aware fallback, async flavor: the whole population
+            # is backing off or churned out — idle-advance the virtual
+            # clock to the next availability instant and re-prime
+            nxt = self._next_available_time(runner.state.virtual_time)
+            if nxt is None:
+                raise RuntimeError("async scheduler drained its event queue")
+            runner.state = replace(runner.state, virtual_time=nxt)
+            self._dispatch(size=fed.devices_per_round)
         k = self.cfg.buffer_size or max(1, fed.devices_per_round // 2)
         round_index = runner.state.round_index
         arrived = self._pop_k_arrivals(k, round_index)
         if not arrived:
             raise RuntimeError("async scheduler drained its event queue")
         close_t = max(j.finish for j in arrived)  # heap pops are monotone
+        ok = self._screen(arrived, round_index)
 
-        state, agg_results = self._aggregate_arrivals(arrived, ctx.cfg.num_layers)
-        ordered = sorted(arrived, key=lambda j: j.order_key)
-        realized = np.asarray([j.duration for j in ordered], dtype=np.float64)
-        prev_acc = self._feedback_and_prev_acc(state, agg_results, realized, arrived)
-        row = self._row(close_t, arrived=ordered, dispatched=ordered)
-        row["staleness"] = float(np.mean(agg_results.staleness))
+        state, agg_results = self._aggregate_arrivals(ok, ctx.cfg.num_layers)
+        ordered = sorted(ok, key=lambda j: j.order_key)
+        if agg_results is not None:
+            realized = np.asarray([j.duration for j in ordered], dtype=np.float64)
+            prev_acc = self._feedback_and_prev_acc(state, agg_results, realized, ok)
+        else:  # the whole buffer was screened out — aggregate nothing
+            prev_acc = state.prev_acc
+        row = self._row(
+            close_t,
+            arrived=ordered,
+            dispatched=sorted(arrived, key=lambda j: j.order_key),
+        )
+        if agg_results is not None:
+            row["staleness"] = float(np.mean(agg_results.staleness))
         state = replace(
             state,
             cum_time=close_t,
@@ -535,6 +730,74 @@ class VirtualClockScheduler:
         ):
             self._dispatch(size=len(arrived))
         return row
+
+    # --------------------------------------------------------- durable state
+    def state_dict(self) -> Tuple[list, dict]:
+        """Serializable snapshot of every piece of in-flight state.
+
+        Returns ``(jobs_arrays, meta)``: one array tree per in-flight job
+        (PEFT update, metrics, importance, share-mask) aligned with the
+        ``meta["jobs"]`` scalar records, plus the event/fault logs and the
+        retry bookkeeping.  Scalars ride the JSON manifest (Python's float
+        repr round-trips exactly); arrays ride the checkpoint npz path
+        with dtypes preserved.  :meth:`load_state_dict` rebuilds a
+        scheduler that continues bit-identically: the heap is keyed
+        ``(finish, dev)``, so re-``heapify``-ing the rebuilt entries pops
+        in exactly the original order regardless of internal arrangement.
+        """
+        jobs = [self._jobs[dev] for dev in sorted(self._jobs)]
+        jobs_arrays, job_meta = [], []
+        for j in jobs:
+            jobs_arrays.append(
+                {
+                    "peft": j.peft,
+                    "metrics": j.metrics,
+                    "importance": j.importance if j.importance is not None else [],
+                    "mask": j.mask,
+                }
+            )
+            record = {
+                name: cast(getattr(j, name)) for name, cast in _JOB_SCALARS
+            }
+            record["has_importance"] = j.importance is not None
+            job_meta.append(record)
+        meta = {
+            "jobs": job_meta,
+            "event_log": [[int(r), int(d), float(t)] for r, d, t in self.event_log],
+            "fault_log": list(self.fault_log),
+            "backoff": {str(k): float(v) for k, v in self._backoff.items()},
+            "fail_count": {str(k): int(v) for k, v in self._fail_count.items()},
+        }
+        return jobs_arrays, meta
+
+    def load_state_dict(self, jobs_arrays: list, meta: dict) -> None:
+        """Rebuild in-flight state saved by :meth:`state_dict`."""
+        self._jobs.clear()
+        self._heap = []
+        for arrs, jm in zip(jobs_arrays, meta["jobs"]):
+            # jm holds JSON scalars (never device arrays); the shared field
+            # table keeps save/load coercions from drifting apart
+            scalars = {name: cast(jm[name]) for name, cast in _JOB_SCALARS}
+            job = _Job(
+                peft=jax.tree.map(jnp.asarray, arrs["peft"]),
+                metrics=arrs["metrics"],
+                importance=arrs["importance"] if jm["has_importance"] else None,
+                mask=np.asarray(arrs["mask"]),
+                **scalars,
+            )
+            self._jobs[job.dev] = job
+            self._heap.append((job.finish, job.dev))
+        heapq.heapify(self._heap)
+        self.event_log = [
+            (int(r), int(d), float(t)) for r, d, t in meta.get("event_log", [])
+        ]
+        self.fault_log = list(meta.get("fault_log", []))
+        self._backoff = {
+            int(k): float(v) for k, v in meta.get("backoff", {}).items()
+        }
+        self._fail_count = {
+            int(k): int(v) for k, v in meta.get("fail_count", {}).items()
+        }
 
     # ------------------------------------------------------------------ rows
     def _row(self, close_t, *, arrived: List[_Job], dispatched: List[_Job]) -> dict:

@@ -43,9 +43,35 @@ def cohort_shared_masks(importances, k: int):
     return jax.vmap(lambda imp: ptls.shared_layer_mask(imp, k))(importances)
 
 
+def screen_finite(tree, fallback=None):
+    """Last-line non-finite screen on an aggregated tree (traced).
+
+    The scheduler already rejects non-finite client updates host-side
+    before they reach aggregation; this guard is the defense-in-depth
+    layer *inside* the traced aggregation programs, so even an update
+    that bypasses host screening (a custom algorithm, a direct
+    ``server_lib`` caller) cannot poison the global PEFT.  Non-finite
+    output entries are replaced by ``fallback`` (matching tree) or zero.
+
+    Bit-transparency: ``jnp.where`` lowers to ``select_n``, which returns
+    the selected operand *exactly*, and on an all-finite tree every lane
+    selects the aggregated value — so healthy runs are bit-identical with
+    or without the guard (the schedule-parity suite pins this).  The
+    ``is_finite`` primitive this traces into the jaxpr is what the
+    ``repro.analysis`` finite-guard contract asserts is present.
+    """
+    if fallback is None:
+        return jax.tree.map(
+            lambda x: jnp.where(jnp.isfinite(x), x, jnp.zeros_like(x)), tree
+        )
+    return jax.tree.map(
+        lambda x, f: jnp.where(jnp.isfinite(x), x, f), tree, fallback
+    )
+
+
 def fedavg(client_trees: Sequence) -> object:
     """Mean over clients of identical pytrees (layout-agnostic)."""
-    return jax.tree.map(lambda *xs: sum(xs) / len(xs), *client_trees)
+    return screen_finite(jax.tree.map(lambda *xs: sum(xs) / len(xs), *client_trees))
 
 
 def staleness_weights(staleness, alpha: float) -> np.ndarray:
@@ -68,8 +94,10 @@ def weighted_fedavg(client_trees: Sequence, weights) -> object:
     :func:`fedavg` and jit-safe (weights may be traced).
     """
     w = jnp.asarray(weights, dtype=jnp.float32).ravel()
-    return jax.tree.map(
-        lambda *xs: sum(w[i] * x for i, x in enumerate(xs)), *client_trees
+    return screen_finite(
+        jax.tree.map(
+            lambda *xs: sum(w[i] * x for i, x in enumerate(xs)), *client_trees
+        )
     )
 
 
@@ -99,10 +127,16 @@ def ptls_aggregate(client_peft, masks, global_peft, weights=None):
             jax.tree.map(lambda *xs: jnp.stack(xs), *[c[l] for c in client_peft])
             for l in range(num_layers)
         ]
-        return ptls.masked_layer_mean(stacked, jnp.asarray(masks), global_peft, weights)
+        return screen_finite(
+            ptls.masked_layer_mean(stacked, jnp.asarray(masks), global_peft, weights),
+            fallback=global_peft,
+        )
     if isinstance(client_peft, (list, tuple)):
         client_peft = jax.tree.map(lambda *xs: jnp.stack(xs), *client_peft)
-    return ptls.masked_layer_mean(client_peft, jnp.asarray(masks), global_peft, weights)
+    return screen_finite(
+        ptls.masked_layer_mean(client_peft, jnp.asarray(masks), global_peft, weights),
+        fallback=global_peft,
+    )
 
 
 def _pad_lora(lora: dict, rank: int) -> dict:
@@ -128,8 +162,10 @@ def _pad_layer(layer: dict, rank: int) -> dict:
 def _weighted_tree_mean(weights, *trees):
     """Sparsity-weighted mean over identically-shaped client trees, one
     jit'd dispatch (the padded hetlora aggregation body)."""
-    return jax.tree.map(
-        lambda *xs: sum(w * x for w, x in zip(weights, xs)), *trees
+    return screen_finite(
+        jax.tree.map(
+            lambda *xs: sum(w * x for w, x in zip(weights, xs)), *trees
+        )
     )
 
 

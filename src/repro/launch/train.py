@@ -12,7 +12,10 @@ mesh).  ``--resume`` continues bit-exactly from the newest run-state
 checkpoint under ``--state-dir``.  ``--schedule`` selects the
 virtual-clock scheduling policy (``sync`` barrier, ``deadline`` with
 ``--deadline``/``--straggler``, FedBuff-style ``async-buffer`` with
-``--buffer-size``/``--staleness-alpha``).
+``--buffer-size``/``--staleness-alpha``).  ``--fault-plan`` (a JSON
+:class:`~repro.federated.faults.FaultPlan` file) or the ``--fault-*``
+shorthand probabilities inject seeded client dropout / bandwidth collapse /
+NaN updates; rejected updates and retries land in the report.
 """
 from __future__ import annotations
 
@@ -20,8 +23,10 @@ import argparse
 import json
 import os
 import time
+from dataclasses import replace as dc_replace
 
 from repro import api
+from repro.federated.faults import FaultPlan
 from repro.checkpoint import save_pytree
 from repro.configs import (
     ARCH_IDS,
@@ -60,6 +65,17 @@ def main():
                     help="async-buffer: aggregate every K arrivals")
     ap.add_argument("--staleness-alpha", type=float, default=None,
                     help="staleness discount exponent: w = 1/(1+s)^alpha")
+    ap.add_argument("--fault-plan", default=None,
+                    help="JSON FaultPlan file (repro.federated.faults); the "
+                    "--fault-* flags override its fields")
+    ap.add_argument("--fault-dropout", type=float, default=None,
+                    help="per-job client mid-round dropout probability")
+    ap.add_argument("--fault-nan", type=float, default=None,
+                    help="per-job corrupted (NaN) update probability")
+    ap.add_argument("--fault-bandwidth", type=float, default=None,
+                    help="per-job bandwidth-collapse probability")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="fault-plan RNG seed (default: --seed)")
     ap.add_argument("--mean-rate", type=float, default=0.5)
     ap.add_argument("--lr", type=float, default=5e-3)
     ap.add_argument("--target-acc", type=float, default=None)
@@ -71,6 +87,26 @@ def main():
                     help="resume from the newest run-state checkpoint")
     ap.add_argument("--out", default="results/train_history.json")
     args = ap.parse_args()
+
+    fault_kw = {
+        k: v
+        for k, v in (
+            ("dropout_prob", args.fault_dropout),
+            ("nan_update_prob", args.fault_nan),
+            ("bandwidth_collapse_prob", args.fault_bandwidth),
+            ("seed", args.fault_seed),
+        )
+        if v is not None
+    }
+    if args.fault_plan:
+        fault_plan = FaultPlan.from_file(args.fault_plan)
+        if fault_kw:
+            fault_plan = dc_replace(fault_plan, **fault_kw)
+    elif fault_kw:
+        fault_kw.setdefault("seed", args.seed)
+        fault_plan = FaultPlan(**fault_kw)
+    else:
+        fault_plan = None
 
     cfg = get_config(args.arch, smoke=args.smoke)
     fed_cfg = FederatedConfig(
@@ -103,6 +139,7 @@ def main():
         staleness_alpha=args.staleness_alpha,
         checkpoint_dir=args.state_dir,
         resume=args.resume,
+        fault_plan=fault_plan,
     )
     res = runner.run(rounds=args.rounds, target_accuracy=args.target_acc)
 
@@ -113,6 +150,16 @@ def main():
             f"t={res.cum_time_s[r]/3600:.2f}h mem={res.memory_gb[r]:.1f}GB"
         )
     print(f"final accuracy (all devices): {res.final_accuracy:.3f}")
+    if fault_plan is not None:
+        rejected = [
+            e for e in runner.scheduler.fault_log
+            if e["reason"] in ("dropout", "non-finite-update")
+        ]
+        print(
+            f"faults: {len(runner.scheduler.fault_log)} events, "
+            f"{len(rejected)} rejected updates "
+            f"({sum(e['burned_compute_s'] for e in rejected):.0f}s compute burned)"
+        )
     print(f"wall time: {time.time()-t0:.1f}s (simulated federated: {res.cum_time_s[-1]/3600:.2f}h)")
 
     os.makedirs(args.ckpt_dir, exist_ok=True)
@@ -129,6 +176,7 @@ def main():
                 "final_accuracy": res.final_accuracy,
                 "traffic_mb": res.traffic_mb.tolist(),
                 "energy_j": res.energy_j.tolist(),
+                "fault_log": runner.scheduler.fault_log,
             },
             f,
             indent=2,

@@ -1,0 +1,310 @@
+"""Fault-injection semantics: determinism, screening, graceful degradation.
+
+The :class:`~repro.federated.faults.FaultInjector` draws every fault from a
+generator keyed ``(seed, kind, round, dev)``, so fault sequences are a pure
+function of the plan and the dispatch coordinates — identical across runs,
+across batched/sequential cohort modes, and independent of draw order.  A
+zero-fault plan must be bit-transparent, and under real faults every policy
+must complete with a finite global PEFT (rejected updates screened, burned
+compute billed, dropped devices retried after backoff).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.configs import FederatedConfig, PEFTConfig, STLDConfig, TrainConfig, get_config
+from repro.data import make_task
+from repro.federated import server as server_lib
+from repro.federated.faults import (
+    FaultInjector,
+    FaultPlan,
+    ServerKilled,
+    resolve_fault_plan,
+)
+from repro.federated.scheduler import ScheduleConfig
+
+from _hypothesis_fallback import given, settings, st
+
+_CFG = get_config("qwen3-1.7b", smoke=True).replace(
+    num_layers=4, d_model=32, d_ff=64, num_heads=2, num_kv_heads=2,
+    vocab_size=128, dtype="float32",
+)
+_FED = FederatedConfig(num_devices=6, devices_per_round=4, local_steps=2, batch_size=8)
+_TRAIN = TrainConfig(learning_rate=5e-3, total_steps=100, warmup_steps=2)
+_TASK = make_task(num_examples=256, vocab_size=128, seed=0)
+_PROFILES = ["tx2", "nx", "agx", "tx2", "nx", "agx"]
+_ROUNDS = 3
+
+_POLICIES = [
+    "sync",
+    ScheduleConfig(policy="deadline", deadline_s=200.0, straggler="drop"),
+    ScheduleConfig(policy="deadline", deadline_s=200.0, straggler="carry"),
+    ScheduleConfig(policy="async-buffer", buffer_size=2, staleness_alpha=0.5),
+]
+_POLICY_IDS = ["sync", "deadline-drop", "deadline-carry", "async"]
+
+
+def _runner(schedule, *, cohort_mode="batched", seed=3, fault_plan=None, **kw):
+    return api.build(
+        "droppeft",
+        cfg=_CFG,
+        peft_cfg=PEFTConfig(method="lora", lora_rank=2),
+        stld_cfg=STLDConfig(mode="cond", mean_rate=0.5, gather_bucket=1),
+        fed_cfg=_FED,
+        train_cfg=_TRAIN,
+        seed=seed,
+        task=_TASK,
+        cohort_mode=cohort_mode,
+        schedule=schedule,
+        device_profile=_PROFILES,
+        cost_model=get_config("qwen3-1.7b"),
+        fault_plan=fault_plan,
+        **kw,
+    )
+
+
+def _result_arrays(res):
+    return [
+        res.cum_time_s, res.accuracy, res.loss, res.rates, res.active_fraction,
+        res.traffic_mb, res.energy_j, res.memory_gb, res.arrivals,
+    ]
+
+
+def _finite_tree(tree) -> bool:
+    return all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(tree))
+
+
+# ------------------------------------------------------------- plan/injector
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(dropout_prob=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(dropout_frac=(0.0, 0.5))  # lo must be > 0
+    with pytest.raises(ValueError):
+        FaultPlan(bandwidth_collapse_factor=0.5)
+    with pytest.raises(ValueError):
+        FaultPlan(retry_backoff_s=100.0, max_backoff_s=10.0)
+    assert not FaultPlan().any_faults
+    assert FaultPlan(dropout_prob=0.1).any_faults
+    assert FaultPlan(kill_at_rounds=(2,)).any_faults
+
+
+def test_fault_plan_json_roundtrip(tmp_path):
+    plan = FaultPlan(
+        seed=7, dropout_prob=0.25, nan_updates=((1, 2),),
+        churn=((3, 10.0, 50.0),), kill_at_rounds=(4,),
+    )
+    assert FaultPlan.from_json(plan.to_json()) == plan
+    path = tmp_path / "plan.json"
+    path.write_text(plan.to_json())
+    assert FaultPlan.from_file(str(path)) == plan
+    assert resolve_fault_plan(str(path)) == plan
+    assert resolve_fault_plan({"seed": 7, "dropout_prob": 0.25}) == FaultPlan(
+        seed=7, dropout_prob=0.25
+    )
+    assert resolve_fault_plan(None) is None
+    with pytest.raises(TypeError):
+        resolve_fault_plan(42)
+
+
+def test_injector_draws_are_order_independent():
+    """Every fault outcome is a pure function of (seed, kind, round, dev):
+    querying coordinates in any order — or twice — changes nothing."""
+    inj = FaultInjector(FaultPlan(seed=11, dropout_prob=0.5, nan_update_prob=0.3))
+    coords = [(r, d) for r in range(5) for d in range(6)]
+    forward = [(inj.dropout_at(r, d), inj.corrupts(r, d)) for r, d in coords]
+    backward = [
+        (inj.dropout_at(r, d), inj.corrupts(r, d)) for r, d in reversed(coords)
+    ]
+    assert forward == backward[::-1]
+    # distinct seeds decorrelate
+    other = FaultInjector(FaultPlan(seed=12, dropout_prob=0.5, nan_update_prob=0.3))
+    assert forward != [
+        (other.dropout_at(r, d), other.corrupts(r, d)) for r, d in coords
+    ]
+
+
+def test_injector_pinned_nan_and_probability():
+    inj = FaultInjector(FaultPlan(seed=0, nan_updates=((2, 4),)))
+    assert inj.corrupts(2, 4)
+    assert not inj.corrupts(2, 3)
+    # with p=1 every coordinate corrupts; dropout frac stays inside its range
+    inj = FaultInjector(
+        FaultPlan(seed=0, nan_update_prob=1.0, dropout_prob=1.0,
+                  dropout_frac=(0.3, 0.9))
+    )
+    for r, d in [(0, 0), (3, 5)]:
+        assert inj.corrupts(r, d)
+        frac = inj.dropout_at(r, d)
+        assert frac is not None and 0.3 <= frac <= 0.9
+
+
+def test_backoff_exponential_and_capped():
+    inj = FaultInjector(FaultPlan(retry_backoff_s=30.0, max_backoff_s=200.0))
+    assert inj.backoff_s(1) == 30.0
+    assert inj.backoff_s(2) == 60.0
+    assert inj.backoff_s(3) == 120.0
+    assert inj.backoff_s(4) == 200.0  # capped
+    assert inj.backoff_s(50) == 200.0
+
+
+def test_churn_windows():
+    inj = FaultInjector(FaultPlan(churn=((2, 10.0, 50.0), (2, 80.0, 90.0))))
+    assert not inj.unavailable(2, 9.0)
+    assert inj.unavailable(2, 10.0)
+    assert inj.unavailable(2, 49.0)
+    assert not inj.unavailable(2, 50.0)
+    assert not inj.unavailable(3, 20.0)
+    assert inj.next_rejoin(2, 20.0) == 50.0
+    assert inj.next_rejoin(2, 85.0) == 90.0
+    assert inj.next_rejoin(2, 60.0) is None
+
+
+# ----------------------------------------------------- staleness-weight props
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    n=st.integers(min_value=1, max_value=32),
+    alpha=st.floats(min_value=0.0, max_value=8.0),
+)
+def test_staleness_weights_finite_and_normalized(seed, n, alpha):
+    """Under any dropout pattern — i.e. any achievable staleness vector,
+    including extreme lags from repeatedly-dropped devices — the staleness
+    weights stay finite, strictly positive, and sum to one."""
+    rng = np.random.default_rng(seed)
+    staleness = rng.integers(0, 10_000, size=n)
+    w = server_lib.staleness_weights(staleness, alpha)
+    assert w.shape == (n,)
+    assert np.all(np.isfinite(w))
+    assert np.all(w > 0)
+    assert math.isclose(float(w.sum()), 1.0, rel_tol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_screen_finite_is_identity_on_finite(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    tree = {"a": x, "b": {"c": x * 3}}
+    out = server_lib.screen_finite(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # corrupting one leaf screens only that leaf, to the fallback
+    bad = {"a": x.at[0, 0].set(jnp.nan), "b": {"c": x * 3}}
+    fb = {"a": jnp.full_like(x, 7.0), "b": {"c": jnp.zeros_like(x)}}
+    out = server_lib.screen_finite(bad, fallback=fb)
+    assert float(out["a"][0, 0]) == 7.0
+    assert np.array_equal(np.asarray(out["b"]["c"]), np.asarray(x * 3))
+
+
+# ---------------------------------------------------------- integration-level
+@pytest.mark.slow
+@pytest.mark.chaos
+@pytest.mark.parametrize("schedule", _POLICIES, ids=_POLICY_IDS)
+def test_zero_fault_plan_is_bit_transparent(schedule):
+    """Attaching a default FaultPlan() must not change any result array:
+    the injector threads through dispatch/arrival but never fires."""
+    base = _runner(schedule).run(rounds=_ROUNDS)
+    faulted = _runner(schedule, fault_plan=FaultPlan()).run(rounds=_ROUNDS)
+    for a, b in zip(_result_arrays(base), _result_arrays(faulted)):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+@pytest.mark.parametrize("schedule", _POLICIES, ids=_POLICY_IDS)
+def test_degradation_smoke_all_policies(schedule):
+    """Acceptance: >=10% dropout + one pinned NaN update — every policy
+    completes, rejections are logged and billed, and the aggregated global
+    PEFT stays finite."""
+    plan = FaultPlan(seed=7, dropout_prob=0.3, nan_updates=((1, 2),))
+    runner = _runner(schedule, fault_plan=plan)
+    res = runner.run(rounds=_ROUNDS)
+    assert res.rounds == _ROUNDS
+    assert _finite_tree(runner.state.global_peft)
+    rejected = [
+        e for e in runner.scheduler.fault_log
+        if e["reason"] in ("dropout", "non-finite-update")
+    ]
+    assert rejected, "expected at least one rejected update"
+    for e in rejected:
+        assert e["burned_compute_s"] >= 0.0
+        if e["reason"] == "dropout":
+            assert e["retry_after"] > e["time"]  # backoff scheduled
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_fault_sequence_identical_across_cohort_modes():
+    """Same plan, batched vs sequential cohort execution: identical fault
+    coordinates and rejection reasons, event devices identical, times equal
+    to float tolerance (the cross-mode determinism contract)."""
+    plan = FaultPlan(seed=7, dropout_prob=0.3, nan_updates=((1, 2),))
+    sched = ScheduleConfig(policy="deadline", deadline_s=200.0, straggler="carry")
+    logs, events = [], []
+    for mode in ("batched", "sequential"):
+        runner = _runner(sched, cohort_mode=mode, fault_plan=plan)
+        runner.run(rounds=_ROUNDS)
+        logs.append(runner.scheduler.fault_log)
+        events.append(runner.scheduler.event_log)
+    keyed = [
+        [(e["round"], e["dev"], e["reason"]) for e in log] for log in logs
+    ]
+    assert keyed[0] == keyed[1]
+    np.testing.assert_allclose(
+        [e["time"] for e in logs[0]], [e["time"] for e in logs[1]], rtol=1e-9
+    )
+    assert [(r, d) for r, d, _ in events[0]] == [(r, d) for r, d, _ in events[1]]
+    np.testing.assert_allclose(
+        [t for _, _, t in events[0]], [t for _, _, t in events[1]], rtol=1e-9
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_total_dropout_idle_advances_not_stalls():
+    """dropout_prob=1.0: every update is rejected and every device ends up
+    backing off — the deadline-aware fallback must idle-advance the virtual
+    clock and keep closing rounds instead of stalling or raising."""
+    # backoff far longer than a round, so within 3 rounds every device is
+    # backing off simultaneously and dispatch finds nothing — the idle-
+    # advance path must fire
+    plan = FaultPlan(
+        seed=0, dropout_prob=1.0, retry_backoff_s=5000.0, max_backoff_s=20000.0
+    )
+    runner = _runner(
+        ScheduleConfig(policy="deadline", deadline_s=200.0, straggler="drop"),
+        fault_plan=plan,
+    )
+    res = runner.run(rounds=_ROUNDS)
+    assert res.rounds == _ROUNDS
+    assert res.arrivals.sum() == 0  # nothing ever aggregated
+    assert np.all(np.diff(res.cum_time_s) > 0)  # the clock kept moving
+    assert _finite_tree(runner.state.global_peft)
+
+
+@pytest.mark.slow
+@pytest.mark.chaos
+def test_kill_and_restart_under_faults(tmp_path):
+    """ServerKilled fires after the checkpoint; resuming with the SAME plan
+    reproduces the uninterrupted faulted run bit-for-bit (fault draws are
+    stateless, so the restart replays the identical fault sequence)."""
+    plan = FaultPlan(seed=7, dropout_prob=0.3, nan_updates=((1, 2),))
+    sched = ScheduleConfig(policy="deadline", deadline_s=200.0, straggler="carry")
+    base = _runner(sched, fault_plan=plan).run(rounds=_ROUNDS)
+
+    killer = dataclasses.replace(plan, kill_at_rounds=(1,))
+    d = str(tmp_path / "ckpt")
+    runner = _runner(sched, fault_plan=killer, checkpoint_dir=d)
+    with pytest.raises(ServerKilled):
+        runner.run(rounds=_ROUNDS)
+    resumed = _runner(sched, fault_plan=plan, checkpoint_dir=d, resume=True)
+    res = resumed.run(rounds=_ROUNDS)
+    for a, b in zip(_result_arrays(base), _result_arrays(res)):
+        np.testing.assert_array_equal(a, b)
