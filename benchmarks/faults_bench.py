@@ -117,8 +117,10 @@ def run(quick: bool = False):
         assert res.rounds == rounds, f"p={p}: run stalled at {res.rounds} rounds"
         curve.append({
             "dropout_prob": p,
+            # repro-lint: disable=JXH002 — SimResult arrays are host numpy
             "final_accuracy": round(float(res.accuracy[-1]), 4),
             "sustained_max": round(_sustained_max(res), 4),
+            # repro-lint: disable=JXH002 — SimResult arrays are host numpy
             "virtual_end_s": round(float(res.cum_time_s[-1]), 2),
             "mean_arrivals": round(float(res.arrivals.mean()), 3),
             "rejected_updates": len(rejected),

@@ -18,7 +18,10 @@ explicit margin):
 * the target accuracy is the worst run's sustained maximum, so TTA is
   defined for every run and no policy is scored on rounds it never reached;
 * the asserted claim is *deadline/async TTA <= sync TTA within MARGIN*;
-  the measured speedups are reported, not asserted.
+  the measured speedups are reported, not asserted;
+* a fourth column, ``async_compressed``, runs the same async schedule with
+  int8+top-k EF uplinks: it must bill strictly less traffic than ``async``
+  and reach the shared target within MARGIN of it.
 
 Outputs: CSV rows (stdout), one JSON summary line, and
 ``BENCH_schedule.json`` for the CI artifact trail.
@@ -54,7 +57,7 @@ def _deadline_budget() -> float:
     return 1.5 * float(nx.total_time_s[0])
 
 
-def _run(schedule, *, rounds, seed):
+def _run(schedule, *, rounds, seed, compression=None):
     return api.experiment(
         "droppeft",
         cfg=sim_model_cfg(),
@@ -64,6 +67,7 @@ def _run(schedule, *, rounds, seed):
         cost_model=cost_model_cfg(),
         device_profile=_PROFILES,
         schedule=schedule,
+        compression=compression,
         seed=seed,
         rounds=rounds,
     )
@@ -79,20 +83,26 @@ def run(quick: bool = False):
     rounds = 6 if quick else 10
     seeds = (0,) if quick else (0, 1)
     deadline = _deadline_budget()
+    async_sched = ScheduleConfig(
+        policy="async-buffer", buffer_size=max(1, _COHORT // 2),
+        staleness_alpha=0.5,
+    )
+    # policy name -> (schedule, uplink compression); async_compressed is the
+    # same event-driven loop with int8+top-k EF uplinks, so its column
+    # isolates the comm-time saving at matched aggregation semantics
     policies = {
-        "sync": "sync",
-        "deadline": ScheduleConfig(
-            policy="deadline", deadline_s=deadline, straggler="drop"
+        "sync": ("sync", None),
+        "deadline": (
+            ScheduleConfig(policy="deadline", deadline_s=deadline, straggler="drop"),
+            None,
         ),
-        "async": ScheduleConfig(
-            policy="async-buffer", buffer_size=max(1, _COHORT // 2),
-            staleness_alpha=0.5,
-        ),
+        "async": (async_sched, None),
+        "async_compressed": (async_sched, "int8+topk"),
     }
 
     results = {
-        name: [_run(sched, rounds=rounds, seed=s) for s in seeds]
-        for name, sched in policies.items()
+        name: [_run(sched, rounds=rounds, seed=s, compression=comp) for s in seeds]
+        for name, (sched, comp) in policies.items()
     }
 
     # target every run can reach: the worst run's sustained maximum
@@ -105,6 +115,10 @@ def run(quick: bool = False):
         )
         tta[name] = min(per_seed)  # min-of-trials
 
+    traffic = {
+        name: float(np.mean([r.traffic_mb.sum() for r in rs]))
+        for name, rs in results.items()
+    }
     for name, rs in results.items():
         virt = float(np.mean([r.cum_time_s[-1] for r in rs]))
         arr = float(np.mean([r.arrivals.mean() for r in rs]))
@@ -112,12 +126,18 @@ def run(quick: bool = False):
             f"schedule/{name}",
             tta[name] * 1e6,
             f"tta_s={tta[name]:.1f};virtual_end_s={virt:.1f};"
+            f"traffic_mb={traffic[name]:.2f};"
             f"mean_arrivals={arr:.2f};rounds={rounds};seeds={len(seeds)}",
         )
     speedup_deadline = tta["sync"] / tta["deadline"]
     speedup_async = tta["sync"] / tta["async"]
+    speedup_compressed = tta["async"] / tta["async_compressed"]
     emit("schedule/speedup_deadline", 0.0, f"x{speedup_deadline:.2f};margin={MARGIN}")
     emit("schedule/speedup_async", 0.0, f"x{speedup_async:.2f};margin={MARGIN}")
+    emit(
+        "schedule/speedup_compressed_vs_async", 0.0,
+        f"x{speedup_compressed:.2f};margin={MARGIN}",
+    )
 
     summary = {
         "bench": "schedule",
@@ -129,11 +149,16 @@ def run(quick: bool = False):
         "deadline_s": round(deadline, 2),
         "target_accuracy": round(target, 4),
         "tta_s": {k: round(v, 2) for k, v in tta.items()},
+        "traffic_mb": {k: round(v, 4) for k, v in traffic.items()},
+        "compression": {"async_compressed": "int8+topk"},
         "speedup_deadline_min_of_trials": round(speedup_deadline, 3),
         "speedup_async_min_of_trials": round(speedup_async, 3),
+        "speedup_compressed_vs_async_min_of_trials": round(speedup_compressed, 3),
         "margin": MARGIN,
         "claim_deadline_not_slower": speedup_deadline >= 1.0 - MARGIN,
         "claim_async_not_slower": speedup_async >= 1.0 - MARGIN,
+        "claim_compressed_less_traffic": traffic["async_compressed"] < traffic["async"],
+        "claim_compressed_not_slower": speedup_compressed >= 1.0 - MARGIN,
     }
     print(json.dumps(summary))
     out_path = os.environ.get("BENCH_SCHEDULE_JSON", "BENCH_schedule.json")
@@ -149,6 +174,17 @@ def run(quick: bool = False):
     assert speedup_async >= 1.0 - MARGIN, (
         f"async TTA slower than sync beyond the {MARGIN:.0%} margin: "
         f"{tta['async']:.1f}s vs {tta['sync']:.1f}s (x{speedup_async:.2f})"
+    )
+    # compressed uplinks must actually shrink the wire, and must not cost
+    # accuracy-time beyond the margin (same target, same async schedule)
+    assert traffic["async_compressed"] < traffic["async"], (
+        f"compressed uplinks did not reduce traffic: "
+        f"{traffic['async_compressed']:.2f}MB vs {traffic['async']:.2f}MB"
+    )
+    assert speedup_compressed >= 1.0 - MARGIN, (
+        f"compressed-async TTA slower than async beyond the {MARGIN:.0%} "
+        f"margin: {tta['async_compressed']:.1f}s vs {tta['async']:.1f}s "
+        f"(x{speedup_compressed:.2f})"
     )
 
 

@@ -250,6 +250,39 @@ def unguarded_aggregation() -> List[Violation]:
     return contracts.check_finite_guard(trace)
 
 
+@_fixture("uplink-callback")
+def host_roundtrip_in_uplink() -> List[Violation]:
+    """A dequantize→aggregate pipeline with a pure_callback wedged between
+    the two — the silent device_get the uplink contract forbids."""
+    import numpy as np
+
+    from repro.federated import compression as comp_lib
+
+    n, d = 3, 8
+    clients = [{"a": jnp.ones((d,)), "b": jnp.ones((d,))} for _ in range(n)]
+    wire = [comp_lib.quantize_int8(c) for c in clients]
+    vals = [v for v, _ in wire]
+    scales = [s for _, s in wire]
+
+    def fn(vals, scales):
+        dense = [comp_lib.dequantize_int8(v, s) for v, s in zip(vals, scales)]
+        # the host round-trip: every reconstructed tree bounces off numpy
+        dense = [
+            jax.tree.map(
+                lambda x: jax.pure_callback(
+                    lambda v: np.asarray(v), jax.ShapeDtypeStruct(x.shape, x.dtype), x
+                ),
+                t,
+            )
+            for t in dense
+        ]
+        return jax.tree.map(lambda *xs: sum(xs) / len(xs), *dense)
+
+    closed = jax.make_jaxpr(fn)(vals, scales)
+    trace = contracts.make_trace("fixture/uplink-callback", closed)
+    return contracts.check_uplink(trace)
+
+
 # -------------------------------------------------------- recompile fixture
 @_fixture("recompile")
 def static_arg_churn() -> List[Violation]:

@@ -117,6 +117,14 @@ CONTRACT_RULES: Dict[str, ContractRule] = {
             "equivalent jnp.isfinite select) as the last step of the traced "
             "aggregation body",
         ),
+        ContractRule(
+            "uplink-callback",
+            "the traced uplink path (dequantize → densify → aggregate) must "
+            "not round-trip through the host",
+            "a silent device_get / callback between dequantization and the "
+            "reduce serializes every cohort member through host memory; keep "
+            "the dequantize-and-merge pipeline inside one traced program",
+        ),
     )
 }
 
@@ -127,6 +135,7 @@ ALLOWLIST: Dict[str, Dict[str, str]] = {
     "dtype64": {},
     "callback": {},
     "finite-guard": {},
+    "uplink-callback": {},
 }
 
 
@@ -336,6 +345,31 @@ def check_finite_guard(trace: ProgramTrace) -> List[Violation]:
             CONTRACT_RULES["finite-guard"].hint,
         )
     ]
+
+
+def check_uplink(trace: ProgramTrace) -> List[Violation]:
+    """uplink-callback: the dequantize→densify→aggregate program must stay
+    on device end to end — any callback/infeed primitive means a host
+    round-trip inside the compressed-uplink hot path."""
+    if allowlisted("uplink-callback", trace.where):
+        return []
+    cbs = sorted(
+        {
+            eqn.primitive.name
+            for eqn in walk_eqns(trace.jaxpr)
+            if eqn.primitive.name in _CALLBACK_PRIMS
+            or "callback" in eqn.primitive.name
+        }
+    )
+    if cbs:
+        return [
+            Violation(
+                "uplink-callback", trace.where,
+                f"host round-trip between dequantize and reduce: {', '.join(cbs)}",
+                CONTRACT_RULES["uplink-callback"].hint,
+            )
+        ]
+    return []
 
 
 def check_leaf_budget(trace: ProgramTrace, trace_2l: ProgramTrace) -> List[Violation]:
@@ -558,6 +592,79 @@ def aggregation_trace(family: str, *, where="aggregate") -> ProgramTrace:
     return make_trace(where, closed, shapes)
 
 
+def uplink_trace(family: str, *, where="uplink") -> ProgramTrace:
+    """Trace the compressed-uplink server path for one merge family: int8
+    payloads (from top-k'd deltas) in, dequantize, densify, aggregate — all
+    inside one ``make_jaxpr`` so :func:`check_uplink` can prove the pipeline
+    never leaves the device."""
+    from repro.configs import PEFTConfig
+    from repro.core import peft as peft_lib
+    from repro.federated import compression as comp_lib
+    from repro.federated import server as server_lib
+
+    key = ("uplink", family)
+    cached = _trace_cache.get(key)
+    if cached is None:
+        cfg = _smoke_cfg(4)
+        prng = jax.random.PRNGKey(0)
+        n = 3
+        if family == "hetlora":
+            ranks = (2, 4, 4)
+            clients = [
+                peft_lib.init_peft(
+                    prng, cfg, PEFTConfig(method="lora", lora_rank=r)
+                )
+                for r in ranks
+            ]
+        else:
+            gpeft = peft_lib.init_peft(
+                prng, cfg, PEFTConfig(method="lora", lora_rank=2)
+            )
+            clients = [gpeft] * n
+        wire = [
+            comp_lib.quantize_int8(comp_lib.topk_sparsify(c, 0.25))
+            for c in clients
+        ]
+        vals = [v for v, _ in wire]
+        scales = [s for _, s in wire]
+        if family == "hetlora":
+
+            def fn(vals, scales):
+                dense = [
+                    comp_lib.dequantize_int8(v, s) for v, s in zip(vals, scales)
+                ]
+                return server_lib.hetlora_aggregate(dense, list(ranks), max(ranks))
+
+            closed = jax.make_jaxpr(fn)(vals, scales)
+            shapes = stacked_leaf_shapes(clients[-1])
+        elif family == "ptls":
+            masks = np.ones((n, cfg.num_layers), dtype=bool)
+
+            def fn(vals, scales, gp):
+                dense = [
+                    comp_lib.dequantize_int8(v, s) for v, s in zip(vals, scales)
+                ]
+                cohort = jax.tree.map(lambda *xs: jnp.stack(xs), *dense)
+                return server_lib.ptls_aggregate(cohort, masks, gp)
+
+            closed = jax.make_jaxpr(fn)(vals, scales, clients[0])
+            shapes = stacked_leaf_shapes(clients[0])
+        else:  # fedavg
+
+            def fn(vals, scales):
+                dense = [
+                    comp_lib.dequantize_int8(v, s) for v, s in zip(vals, scales)
+                ]
+                return server_lib.fedavg(dense)
+
+            closed = jax.make_jaxpr(fn)(vals, scales)
+            shapes = stacked_leaf_shapes(clients[0])
+        cached = (closed, shapes)
+        _trace_cache[key] = cached
+    closed, shapes = cached
+    return make_trace(where, closed, shapes)
+
+
 def decode_trace(*, where="serving/decode", num_tokens=4) -> ProgramTrace:
     """Trace the greedy KV-cache decode loop at smoke scale (shared across
     algorithms — serving is method-independent)."""
@@ -667,6 +774,9 @@ def check_algorithms(
         agg_tr = aggregation_trace(_merge_family(name), where=f"{name}/aggregate")
         violations += check_trace_rules(agg_tr)
         violations += check_finite_guard(agg_tr)
+        violations += check_uplink(
+            uplink_trace(_merge_family(name), where=f"{name}/uplink")
+        )
     if include_decode:
         if progress:
             progress("serving/decode")

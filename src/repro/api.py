@@ -36,6 +36,7 @@ from repro.federated.algorithms import (
     get_algorithm,
     registered_methods,
 )
+from repro.federated.compression import CompressionConfig, resolve_compression
 from repro.federated.runner import ExperimentRunner, SimResult, fresh_algorithm
 from repro.federated.scheduler import ScheduleConfig, resolve_schedule
 
@@ -46,6 +47,7 @@ __all__ = [
     "serve",
     "list_methods",
     "ScheduleConfig",
+    "CompressionConfig",
 ]
 
 
@@ -103,6 +105,13 @@ def build(
     straggler: Optional[str] = None,
     buffer_size: Optional[int] = None,
     staleness_alpha: Optional[float] = None,
+    # uplink compression: a level name ("none" | "int8" | "topk" |
+    # "int8+topk"), "auto" (joint bandit over levels), a dict of
+    # CompressionConfig fields, or a CompressionConfig; None (default) skips
+    # the compression machinery entirely — bit-identical to pre-compression
+    # rounds
+    compression: Union[str, dict, CompressionConfig, None] = None,
+    topk_fraction: Optional[float] = None,
     # pinned hardware mix (one profile name per device); None -> sampled
     device_profile: Optional[Sequence[str]] = None,
     # system-model cost scale: None -> the training cfg; an arch name or a
@@ -165,6 +174,7 @@ def build(
         checkpoint_every=checkpoint_every,
         resume=resume,
         fault_plan=fault_plan,
+        compression=resolve_compression(compression, topk_fraction=topk_fraction),
     )
 
 

@@ -102,7 +102,7 @@ class OnlineConfigurator:
         back float32 arrays); rates are snapped to their exact arm keys so a
         float32 round-trip cannot mint duplicate arms.
         """
-        rates = [self._snap_rate(float(r)) for r in np.asarray(rates).ravel()]
+        rates = self._report_keys(rates)
         acc_gains = [float(g) for g in np.asarray(acc_gains).ravel()]
         times = [float(t) for t in np.asarray(times).ravel()]
         self._round += 1
@@ -141,10 +141,9 @@ class OnlineConfigurator:
         With no evidence yet, falls back to the feasible grid rate closest
         to 0.5 (exactly 0.5 on the default grid, preserving the historical
         default)."""
-        eligible = [a for a in self.arms.values() if a.rate >= self.rate_floor]
+        eligible = [a for a in self.arms.values() if self._meets_floor(a.rate)]
         if not eligible:
-            grid = self._feasible_grid()
-            return min(grid, key=lambda r: abs(r - 0.5)) if grid else 0.5
+            return self._fallback_key(self._feasible_grid())
         return max(eligible, key=lambda a: a.reward).rate
 
     def set_rate_floor(self, floor: float) -> None:
@@ -156,7 +155,7 @@ class OnlineConfigurator:
         rounds.  Existing below-floor arms stop being selected and age out
         through the regular window eviction like any other idle arm."""
         self.rate_floor = float(floor)
-        self.list_c = [r for r in self.list_c if r >= self.rate_floor]
+        self.list_c = [r for r in self.list_c if self._meets_floor(r)]
         if not self.list_c:
             self._refill_candidates()
 
@@ -181,26 +180,41 @@ class OnlineConfigurator:
         }
 
     def load_state_dict(self, state: dict) -> None:
-        self.arms = {
-            a["rate"]: ArmStats(
-                rate=a["rate"], rewards=list(a["rewards"]), last_eval=a["last_eval"]
+        self.arms = {}
+        for a in state["arms"]:
+            key = self._key_from_json(a["rate"])
+            self.arms[key] = ArmStats(
+                rate=key, rewards=list(a["rewards"]), last_eval=a["last_eval"]
             )
-            for a in state["arms"]
-        }
-        self.list_c = list(state["list_c"])
-        self.history = list(state["history"])
+        self.list_c = [self._key_from_json(k) for k in state["list_c"]]
+        self.history = [self._key_from_json(k) for k in state["history"]]
         self.rate_floor = float(state.get("rate_floor", 0.0))
         self.is_explore = state["is_explore"]
         self._exploit_rounds_left = state["exploit_rounds_left"]
         self._round = state["round"]
         if state.get("has_pending", True):
-            self._pending = list(state["pending"])
+            self._pending = [self._key_from_json(k) for k in state["pending"]]
         elif hasattr(self, "_pending"):
             del self._pending  # snapshot predates the first next_round
         rng_state = state["rng_state"]
         self._rng.setstate((rng_state[0], tuple(rng_state[1]), rng_state[2]))
 
     # ------------------------------------------------------------- internals
+    # small arm-key hooks so a subclass can swap the key type (the joint
+    # configurator keys arms by (rate, level) tuples) without touching the
+    # explore/exploit machinery, which is key-agnostic
+    def _meets_floor(self, key) -> bool:
+        return key >= self.rate_floor
+
+    def _fallback_key(self, grid):
+        return min(grid, key=lambda r: abs(r - 0.5)) if grid else 0.5
+
+    def _report_keys(self, rates) -> list:
+        return [self._snap_rate(float(r)) for r in np.asarray(rates).ravel()]
+
+    def _key_from_json(self, key):
+        return key
+
     def _snap_rate(self, r: float) -> float:
         """Map a (possibly float32-degraded) rate back to its exact arm key."""
         candidates = set(self.rate_grid) | set(self.arms) | set(self.list_c) | set(
@@ -231,6 +245,110 @@ class OnlineConfigurator:
         self.list_c = self._top_rates(keep) or [self.best_rate()]
 
     def _top_rates(self, k: int) -> List[float]:
-        eligible = [a for a in self.arms.values() if a.rate >= self.rate_floor]
+        eligible = [a for a in self.arms.values() if self._meets_floor(a.rate)]
         ranked = sorted(eligible, key=lambda a: a.reward, reverse=True)
         return [a.rate for a in ranked[:k]]
+
+
+class JointConfigurator(OnlineConfigurator):
+    """Algorithm 1 over the joint (dropout rate × compression level) space.
+
+    FedLoDrop-style: the arm is a ``(rate, level)`` tuple, so the bandit
+    trades structural shrinkage (layer dropout) against bit-level shrinkage
+    (uplink compression) on one reward — accuracy gain per realized
+    virtual-clock second, which already reflects the compressed comm time.
+    All explore/exploit machinery is inherited; only the arm-key type, the
+    candidate grid (cartesian product), and the report/snap plumbing change.
+    ``rate_floor`` constrains the rate axis alone.
+    """
+
+    joint = True
+
+    def __init__(
+        self,
+        rate_grid: Sequence[float] = (0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9),
+        startup: Sequence[float] = (0.2, 0.5, 0.7),
+        levels: Sequence[str] = ("none", "int8", "topk", "int8+topk"),
+        **kwargs,
+    ):
+        self.levels = tuple(levels)
+        if not self.levels:
+            raise ValueError("JointConfigurator needs at least one level")
+        super().__init__(rate_grid=rate_grid, startup=startup, **kwargs)
+        # pair each startup rate with a cycling level: the first sweep stays
+        # as long as the rate-only bandit's, and _refill_candidates explores
+        # the rest of the product grid over later sweeps
+        self.list_c = [
+            (float(r), self.levels[i % len(self.levels)])
+            for i, r in enumerate(startup)
+            if float(r) >= self.rate_floor
+        ]
+
+    # ------------------------------------------------------------------ api
+    def next_round(self, n_devices: int, *, as_array: bool = False):
+        raise TypeError(
+            "JointConfigurator draws (rate, level) arms; use next_round_joint()"
+        )
+
+    def next_round_joint(self, n_devices: int):
+        """-> (rates, levels): one (dropout rate, compression level) arm per
+        cohort member, round-robin over candidates while exploring."""
+        if self.is_explore:
+            if not self.list_c:
+                self._refill_candidates()
+            arms = [self.list_c[i % len(self.list_c)] for i in range(n_devices)]
+        else:
+            arms = [self.best_rate()] * n_devices
+        self._pending = sorted(set(arms))
+        # repro-lint: disable=JXH002 — arms are host tuples, never device arrays
+        return [float(a[0]) for a in arms], [a[1] for a in arms]
+
+    # ------------------------------------------------------- serialization
+    def state_dict(self) -> dict:
+        state = super().state_dict()
+        state["joint"] = True
+        state["levels"] = list(self.levels)
+        return state
+
+    # ------------------------------------------------------------- internals
+    def _meets_floor(self, key) -> bool:
+        return key[0] >= self.rate_floor
+
+    def _fallback_key(self, grid):
+        if not grid:
+            return (0.5, self.levels[0])
+        # closest-to-0.5 rate, mildest level — the joint analogue of the
+        # rate-only fallback
+        return min(grid, key=lambda ar: (abs(ar[0] - 0.5), self.levels.index(ar[1])))
+
+    def _report_keys(self, arms) -> list:
+        return [self._snap_arm((float(r), str(lv))) for r, lv in arms]
+
+    def _key_from_json(self, key):
+        # JSON round-trips tuples as lists
+        if isinstance(key, (list, tuple)):
+            return (float(key[0]), str(key[1]))
+        return key
+
+    def _snap_arm(self, arm):
+        rate, level = arm
+        candidates = [
+            k
+            for k in (
+                set(self._feasible_grid())
+                | set(self.arms)
+                | set(self.list_c)
+                | set(getattr(self, "_pending", ()))
+            )
+            if k[1] == level
+        ]
+        if not candidates:
+            return arm
+        best = min(candidates, key=lambda k: abs(k[0] - rate))
+        return best if abs(best[0] - rate) < 1e-5 else arm
+
+    def _feasible_grid(self) -> list:
+        rates = [r for r in self.rate_grid if r >= self.rate_floor]
+        if not rates:
+            rates = [max(self.rate_grid)] if self.rate_grid else []
+        return [(float(r), lv) for r in rates for lv in self.levels]

@@ -26,10 +26,22 @@ import numpy as np
 
 import jax
 
+from repro.federated import compression as compression_lib
 from repro.federated.state import CohortResults, RoundPlan, RoundState
 from repro.federated.system_model import sample_bandwidth
 
 _REGISTRY: Dict[str, Type["FederatedAlgorithm"]] = {}
+
+
+def _trees_congruent(a, b) -> bool:
+    """Same treedef and leaf shapes — an EF residual saved for one PEFT
+    geometry (e.g. a hetlora rank) must not be reused for another."""
+    if jax.tree.structure(a) != jax.tree.structure(b):
+        return False
+    return all(
+        np.shape(la) == np.shape(lb)
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
 
 
 def register(name: str):
@@ -109,11 +121,13 @@ class FederatedAlgorithm:
                     replace=False,
                 )
             ]
+        rates, levels = self.round_arms(state, len(cohort))
         return RoundPlan(
             round_index=state.round_index,
             cohort=cohort,
-            rates=self.round_rates(state, len(cohort)),
+            rates=rates,
             adaopt_depth=self.active_depth(state),
+            compression=levels,
         )
 
     def client_init(self, state: RoundState, dev: int):
@@ -139,6 +153,81 @@ class FederatedAlgorithm:
             accuracies=[o[3] for o in outs],
         )
         return replace(state, key=key, global_step=gstep), results
+
+    def compress_uplink(self, state: RoundState, results: CohortResults):
+        """Compress each device's PEFT *delta* for the uplink.
+
+        Runs between ``cohort_step`` and ``aggregate``.  With no
+        ``ctx.compression`` (or every per-device level ``"none"``) this is a
+        strict no-op — ``results`` is untouched, ``uplink_pefts`` stays
+        ``None``, and downstream merge/billing follow the pre-compression
+        bit-exact path.  Otherwise it fills ``results.uplink_pefts`` with
+        the server-side reconstructions (start tree + lossy delta),
+        ``results.uplink_ratio`` with per-device compressed/fp32 wire
+        factors, and threads per-device :class:`ErrorFeedback` residuals
+        through ``state.ef_residual`` (EF runs client-side at training
+        time, so it is correct even for updates the scheduler later carries
+        or drops)."""
+        comp = getattr(self.ctx, "compression", None)
+        if comp is None:
+            return state, results
+        plan = results.plan
+        levels = plan.compression or [comp.kind] * len(plan.cohort)
+        plan.compression = levels
+        if all(lv == "none" for lv in levels):
+            return state, results
+        starts = plan.start_pefts
+        if starts is None:
+            starts = [self.client_init(state, dev) for dev in plan.cohort]
+        ef_residual = dict(state.ef_residual)
+        uplinks, ratios = [], []
+        f32 = jax.numpy.float32
+        for i, dev in enumerate(plan.cohort):
+            kind = levels[i]
+            if kind == "none":
+                uplinks.append(results.pefts[i])
+                ratios.append(1.0)
+                continue
+            start = starts[i]
+            delta = jax.tree.map(
+                lambda a, b: a.astype(f32) - b.astype(f32),
+                results.pefts[i],
+                start,
+            )
+            if comp.error_feedback:
+                residual = ef_residual.get(dev)
+                if residual is None or not _trees_congruent(residual, delta):
+                    residual = compression_lib.ErrorFeedback.init(delta)
+                sent, new_res = compression_lib.ef_step(
+                    delta,
+                    residual,
+                    kind=kind,
+                    fraction=comp.topk_fraction,
+                    decay=comp.ef_decay,
+                )
+                ef_residual[dev] = new_res
+            else:
+                sent = compression_lib.compress_decompress(
+                    delta, kind=kind, fraction=comp.topk_fraction
+                )
+            uplinks.append(
+                jax.tree.map(
+                    lambda s_, b: (b.astype(f32) + s_).astype(b.dtype),
+                    sent,
+                    start,
+                )
+            )
+            ratios.append(
+                compression_lib.uplink_ratio(
+                    delta,
+                    compression_lib.CompressionConfig(
+                        kind=kind, topk_fraction=comp.topk_fraction
+                    ),
+                )
+            )
+        results.uplink_pefts = uplinks
+        results.uplink_ratio = np.asarray(ratios, dtype=np.float64)
+        return replace(state, ef_residual=ef_residual), results
 
     def aggregate(self, state: RoundState, results: CohortResults) -> RoundState:
         """Compute share masks, persist device models, merge the global.
@@ -194,6 +283,11 @@ class FederatedAlgorithm:
                 np.asarray(active_fracs) if self.stld else np.ones(n)
             ),
             share_fraction=results.masks.mean(axis=1),
+            uplink_ratio=(
+                1.0
+                if results.uplink_ratio is None
+                else np.asarray(results.uplink_ratio, dtype=np.float64)
+            ),
         )
         results.cost = cost
         return cost, active_fracs
@@ -239,6 +333,18 @@ class FederatedAlgorithm:
             return [self.fixed_rate] * n
         return [0.0] * n
 
+    def round_arms(self, state: RoundState, n: int):
+        """Per-device (dropout rates, compression levels) for the round.
+
+        With a joint configurator both axes come from one bandit draw;
+        otherwise the rates come from :meth:`round_rates` (identical RNG
+        stream to the pre-compression loop) and the levels stay ``None``
+        (``compress_uplink`` fills in the fixed configured level)."""
+        cfgor = state.configurator
+        if cfgor is not None and getattr(cfgor, "joint", False):
+            return cfgor.next_round_joint(n)
+        return self.round_rates(state, n), None
+
     def active_depth(self, state: RoundState) -> int:
         return self.ctx.cfg.num_layers
 
@@ -246,10 +352,17 @@ class FederatedAlgorithm:
         n = len(results.plan.cohort)
         return np.ones((n, self.ctx.cfg.num_layers), dtype=bool)
 
+    def _merge_trees(self, results: CohortResults) -> list:
+        """What the server aggregates: the (dequantized, densified) uplink
+        reconstructions when compression ran, the raw device trees when it
+        didn't."""
+        return results.pefts if results.uplink_pefts is None else results.uplink_pefts
+
     def merge(self, state: RoundState, results: CohortResults):
+        trees = self._merge_trees(results)
         if results.weights is not None:
-            return self.ctx.engine.weighted_fedavg(results.pefts, results.weights)
-        return self.ctx.engine.fedavg(results.pefts)
+            return self.ctx.engine.weighted_fedavg(trees, results.weights)
+        return self.ctx.engine.fedavg(trees)
 
     def feedback(self, state: RoundState, results: CohortResults, round_times):
         """Hook for online controllers (bandit reward updates)."""

@@ -61,7 +61,7 @@ class FedHetLoRA(FederatedAlgorithm):
         client_ranks = [self.device_rank[dev] for dev in results.plan.cohort]
         # staleness weights (async/carry scheduling) multiply the rank shares
         return server_lib.hetlora_aggregate(
-            results.pefts, client_ranks, self.max_rank,
+            self._merge_trees(results), client_ranks, self.max_rank,
             extra_weights=results.weights,
         )
 

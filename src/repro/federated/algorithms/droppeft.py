@@ -16,7 +16,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.configurator import OnlineConfigurator
+from repro.core.configurator import JointConfigurator, OnlineConfigurator
+from repro.federated import compression as compression_lib
 from repro.federated import server as server_lib
 from repro.federated.algorithms.base import FederatedAlgorithm, register
 from repro.federated.state import CohortResults, RoundState
@@ -53,7 +54,8 @@ class DropPEFT(FederatedAlgorithm):
         if not (self.use_configurator and self.stld):
             return None
         fed = ctx.fed_cfg
-        cfgor = OnlineConfigurator(
+        comp = getattr(ctx, "compression", None)
+        kwargs = dict(
             rate_grid=fed.rate_grid,
             num_candidates=fed.num_candidates,
             explore_rate=fed.explore_rate,
@@ -61,6 +63,13 @@ class DropPEFT(FederatedAlgorithm):
             window_size=fed.window_size,
             seed=ctx.seed,
         )
+        if comp is not None and comp.tune:
+            # joint (dropout rate × compression level) arm space; rewards
+            # come from the realized virtual-clock round times, which
+            # already reflect the compressed uplink billing
+            cfgor = JointConfigurator(levels=compression_lib.LEVELS, **kwargs)
+        else:
+            cfgor = OnlineConfigurator(**kwargs)
         # deadline-aware mode: dropout ratios the slowest profile can never
         # finish within the round budget are infeasible arms — cap the
         # candidate space at the predicted feasible floor so exploration
@@ -120,7 +129,8 @@ class DropPEFT(FederatedAlgorithm):
         # the bit-exact unweighted PTLS masked mean
         weights = None if results.weights is None else np.asarray(results.weights)
         return self.ctx.engine.ptls_aggregate(
-            results.pefts, results.masks, state.global_peft, weights=weights
+            self._merge_trees(results), results.masks, state.global_peft,
+            weights=weights,
         )
 
     def feedback(self, state: RoundState, results: CohortResults, round_times):
@@ -130,7 +140,17 @@ class DropPEFT(FederatedAlgorithm):
         for i, dev in enumerate(results.plan.cohort):
             prev = state.prev_acc.get(dev, 1.0 / self.ctx.task.num_classes)
             gains.append(max(results.accuracies[i] - prev, 0.0))
-        state.configurator.report(results.plan.rates, gains, round_times)
+        cfgor = state.configurator
+        if getattr(cfgor, "joint", False) and results.plan.compression is not None:
+            arms = list(
+                zip(
+                    [float(r) for r in results.plan.rates],
+                    results.plan.compression,
+                )
+            )
+            cfgor.report(arms, gains, round_times)
+        else:
+            cfgor.report(results.plan.rates, gains, round_times)
 
 
 @register("droppeft_b1")

@@ -29,6 +29,7 @@ from repro.checkpoint import ckpt as ckpt_lib
 from repro.core import peft as peft_lib
 from repro.data import DeviceDataset, dirichlet_partition, make_task
 from repro.federated.algorithms import FederatedAlgorithm, get_algorithm
+from repro.federated.compression import CompressionConfig, resolve_compression
 from repro.federated.engine import CohortEngine
 from repro.federated.faults import FaultInjector, resolve_fault_plan
 from repro.federated.scheduler import (
@@ -90,6 +91,7 @@ class ExperimentContext:
     num_classes: Any               # jnp.arange(task.num_classes)
     engine: Optional[CohortEngine] = None
     schedule: Optional[ScheduleConfig] = None  # virtual-clock scheduling policy
+    compression: Optional[CompressionConfig] = None  # uplink compression | None
 
 
 def _build_context(
@@ -178,6 +180,7 @@ class ExperimentRunner:
         checkpoint_every: int = 1,
         resume: bool = False,
         fault_plan=None,
+        compression=None,
     ):
         if isinstance(algorithm, str):
             algorithm = get_algorithm(algorithm)()
@@ -187,6 +190,7 @@ class ExperimentRunner:
             algorithm = fresh_algorithm(algorithm)
         self.algorithm = algorithm
         self.schedule = resolve_schedule(schedule)
+        self.compression = resolve_compression(compression)
         self.fault_plan = resolve_fault_plan(fault_plan)
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = max(1, checkpoint_every)
@@ -196,6 +200,7 @@ class ExperimentRunner:
             task=task, cost_cfg=cost_cfg, seed=seed, device_profile=device_profile,
         )
         ctx.schedule = self.schedule  # visible to bind()/build_configurator
+        ctx.compression = self.compression
         self.ctx = ctx
         global_peft = algorithm.bind(ctx)
 
@@ -276,7 +281,11 @@ class ExperimentRunner:
     #   2 — adds "scheduler" (in-flight jobs, event/fault logs, retry
     #     bookkeeping) + "fault_plan", making async-buffer and
     #     deadline+carry resumable bit-exactly.
-    CKPT_META_VERSION = 2
+    #   3 — adds "ef_residual" (per-device error-feedback residual trees)
+    #     plus per-job uplink reconstructions/levels inside the scheduler
+    #     section.  v2 snapshots still load (empty residuals, no uplink
+    #     state) — they could only have been written by uncompressed runs.
+    CKPT_META_VERSION = 3
 
     def save_checkpoint(self) -> str:
         """Persist the full round state; a resumed run is bit-identical."""
@@ -288,6 +297,9 @@ class ExperimentRunner:
             "device_peft": {str(d): t for d, t in sorted(state.device_peft.items())},
             "last_mask": {
                 str(d): np.asarray(m) for d, m in sorted(state.last_mask.items())
+            },
+            "ef_residual": {
+                str(d): t for d, t in sorted(state.ef_residual.items())
             },
             "scheduler_jobs": sched_jobs,
         }
@@ -370,6 +382,10 @@ class ExperimentRunner:
                 for d, t in arrays["device_peft"].items()
             },
             last_mask={int(d): m for d, m in arrays["last_mask"].items()},
+            ef_residual={
+                int(d): jax.tree.map(jnp.asarray, t)
+                for d, t in arrays.get("ef_residual", {}).items()
+            },
             round_index=meta["round_index"],
             global_step=meta["global_step"],
             cum_time=meta["cum_time"],

@@ -195,6 +195,8 @@ class _Job:
     traffic_mb: float
     memory_gb: float
     failed: bool = False    # client dropped mid-round (fault injection)
+    uplink_peft: Any = None  # server-side reconstruction (compressed uplink)
+    comp: str = ""          # compression level this uplink used ("" = none)
 
     @property
     def order_key(self) -> Tuple[int, int]:
@@ -215,7 +217,12 @@ _JOB_SCALARS = (
     ("finish", float), ("accuracy", float), ("active_frac", float),
     ("compute_s", float), ("comm_s", float), ("energy_j", float),
     ("traffic_mb", float), ("memory_gb", float), ("failed", bool),
+    ("comp", str),
 )
+
+# fields absent from older (pre-compression, meta v2) job records load at
+# these defaults instead of KeyError-ing the resume
+_JOB_SCALAR_DEFAULTS = {"comp": ""}
 
 
 class VirtualClockScheduler:
@@ -297,6 +304,7 @@ class VirtualClockScheduler:
         plan = algo.configure_round(state)
         plan.start_pefts = [algo.client_init(state, dev) for dev in plan.cohort]
         state, results = algo.cohort_step(state, plan)
+        state, results = algo.compress_uplink(state, results)
         state = algo.aggregate(state, results)
         state, row = algo.report(state, results)
         t0 = runner.state.cum_time
@@ -406,6 +414,10 @@ class VirtualClockScheduler:
             job.traffic_mb *= frac
         if inj.corrupts(r, dev):
             job.peft = jax.tree.map(lambda x: jnp.full_like(x, jnp.nan), job.peft)
+            if job.uplink_peft is not None:
+                job.uplink_peft = jax.tree.map(
+                    lambda x: jnp.full_like(x, jnp.nan), job.uplink_peft
+                )
         job.finish = job.dispatch_time + job.duration
 
     def _dispatch(self, size: Optional[int] = None) -> Tuple[Optional[RoundPlan], List[_Job]]:
@@ -420,6 +432,7 @@ class VirtualClockScheduler:
             return None, []
         plan.start_pefts = [algo.client_init(state, dev) for dev in plan.cohort]
         state, results = algo.cohort_step(state, plan)
+        state, results = algo.compress_uplink(state, results)
         results.masks = algo.compute_masks(state, results)
         cost, active_fracs = algo.round_cost(state, results)
         t0 = state.virtual_time
@@ -454,6 +467,12 @@ class VirtualClockScheduler:
                 energy_j=energy_j[i],
                 traffic_mb=traffic_mb[i],
                 memory_gb=memory_gb[i],
+                uplink_peft=(
+                    results.uplink_pefts[i]
+                    if results.uplink_pefts is not None
+                    else None
+                ),
+                comp=plan.compression[i] if plan.compression else "",
             )
             if self.faults is not None:
                 self._inject_dispatch_faults(job)
@@ -500,7 +519,9 @@ class VirtualClockScheduler:
         for job in sorted(arrived, key=lambda j: j.order_key):
             if job.failed:
                 reason = "dropout"
-            elif not _tree_finite(job.peft):
+            elif not _tree_finite(
+                job.peft if job.uplink_peft is None else job.uplink_peft
+            ):
                 reason = "non-finite-update"
             else:
                 self._fail_count.pop(job.dev, None)
@@ -539,6 +560,11 @@ class VirtualClockScheduler:
                 cohort=[j.dev for j in arrived],
                 rates=[j.rate for j in arrived],
                 adaopt_depth=adaopt_depth,
+                compression=(
+                    [j.comp or "none" for j in arrived]
+                    if any(j.comp for j in arrived)
+                    else None
+                ),
             ),
             pefts=[j.peft for j in arrived],
             metrics=[j.metrics for j in arrived],
@@ -546,6 +572,11 @@ class VirtualClockScheduler:
             accuracies=[j.accuracy for j in arrived],
             masks=np.stack([j.mask for j in arrived]),
         )
+        if any(j.uplink_peft is not None for j in arrived):
+            results.uplink_pefts = [
+                j.uplink_peft if j.uplink_peft is not None else j.peft
+                for j in arrived
+            ]
         staleness = np.array(
             [state.server_version - j.version for j in arrived], dtype=np.int64
         )
@@ -754,12 +785,14 @@ class VirtualClockScheduler:
                     "metrics": j.metrics,
                     "importance": j.importance if j.importance is not None else [],
                     "mask": j.mask,
+                    "uplink_peft": j.uplink_peft if j.uplink_peft is not None else [],
                 }
             )
             record = {
                 name: cast(getattr(j, name)) for name, cast in _JOB_SCALARS
             }
             record["has_importance"] = j.importance is not None
+            record["has_uplink"] = j.uplink_peft is not None
             job_meta.append(record)
         meta = {
             "jobs": job_meta,
@@ -777,12 +810,20 @@ class VirtualClockScheduler:
         for arrs, jm in zip(jobs_arrays, meta["jobs"]):
             # jm holds JSON scalars (never device arrays); the shared field
             # table keeps save/load coercions from drifting apart
-            scalars = {name: cast(jm[name]) for name, cast in _JOB_SCALARS}
+            scalars = {
+                name: cast(jm[name]) if name in jm else _JOB_SCALAR_DEFAULTS[name]
+                for name, cast in _JOB_SCALARS
+            }
             job = _Job(
                 peft=jax.tree.map(jnp.asarray, arrs["peft"]),
                 metrics=arrs["metrics"],
                 importance=arrs["importance"] if jm["has_importance"] else None,
                 mask=np.asarray(arrs["mask"]),
+                uplink_peft=(
+                    jax.tree.map(jnp.asarray, arrs["uplink_peft"])
+                    if jm.get("has_uplink", False)
+                    else None
+                ),
                 **scalars,
             )
             self._jobs[job.dev] = job

@@ -3,7 +3,8 @@
 :class:`RoundState` is the single immutable value threaded through every
 lifecycle hook of a :class:`~repro.federated.algorithms.FederatedAlgorithm`.
 It is registered as a JAX pytree: the array-valued fields (PRNG key, global
-PEFT tree, per-device PEFT trees, PTLS share masks) are pytree data, while
+PEFT tree, per-device PEFT trees, PTLS share masks, per-device error-feedback
+residuals) are pytree data, while
 host-side bookkeeping (round counters, the numpy cohort-sampling generator,
 the bandit configurator, the metric history) rides along as metadata.  Hooks
 never mutate a state in place — they return a new one via
@@ -31,6 +32,7 @@ class RoundState:
     global_peft: Any                          # server-side PEFT pytree
     device_peft: Dict[int, Any] = field(default_factory=dict)
     last_mask: Dict[int, Any] = field(default_factory=dict)   # PTLS share masks
+    ef_residual: Dict[int, Any] = field(default_factory=dict)  # EF residual trees
     round_index: int = 0
     global_step: int = 0                      # LR-schedule offset
     cum_time: float = 0.0                     # simulated wall-clock (s)
@@ -44,7 +46,7 @@ class RoundState:
 
 jax.tree_util.register_dataclass(
     RoundState,
-    data_fields=("key", "global_peft", "device_peft", "last_mask"),
+    data_fields=("key", "global_peft", "device_peft", "last_mask", "ef_residual"),
     meta_fields=(
         "round_index",
         "global_step",
@@ -68,6 +70,7 @@ class RoundPlan:
     rates: List[float]                 # per-device mean dropout rates
     adaopt_depth: int                  # progressive depth (== num_layers when off)
     start_pefts: Optional[list] = None # filled by the runner via client_init
+    compression: Optional[List[str]] = None  # per-device uplink levels | None
 
 
 @dataclass
@@ -83,3 +86,5 @@ class CohortResults:
     cost: Any = None                   # SystemModel RoundCost (report)
     staleness: Any = None              # (N,) int server-version lag (async/carry)
     weights: Any = None                # (N,) staleness aggregation weights | None
+    uplink_pefts: Optional[list] = None  # server-side reconstructions (merge)
+    uplink_ratio: Any = None           # (N,) compressed/fp32 uplink factor | None

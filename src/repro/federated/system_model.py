@@ -173,10 +173,17 @@ class SystemModel:
             grads = opt = 0.0
         return MemoryBreakdown(params, act, grads, opt)
 
-    def comm_bytes(self, *, peft: bool, share_fraction: float = 1.0) -> float:
-        """Per-round up+down traffic (fp32 updates, paper §2.2)."""
+    def comm_bytes(
+        self, *, peft: bool, share_fraction: float = 1.0, uplink_ratio=1.0
+    ) -> float:
+        """Per-round up+down traffic (fp32 updates, paper §2.2).
+
+        ``uplink_ratio`` is the compressed/fp32 size factor of the uplink
+        payload (``repro.federated.compression.uplink_ratio``); it scales
+        the *up* component only — the server→device broadcast stays fp32.
+        The default 1.0 is exact (no compression billed)."""
         n = self.peft_params if peft else self.total_params
-        up = n * share_fraction * 4
+        up = n * share_fraction * 4 * uplink_ratio
         down = n * 4
         return up + down
 
@@ -225,18 +232,21 @@ class SystemModel:
         full_ft: bool = False,
         active_fraction=1.0,
         share_fraction=1.0,
+        uplink_ratio=1.0,
     ) -> CohortCost:
         """Vectorized :meth:`round_cost` over a whole cohort.
 
         ``devices`` is a length-N list of profile names; ``bandwidth_mbps``,
-        ``active_fraction`` and ``share_fraction`` broadcast as (N,) arrays.
-        The per-token helpers are affine in those fractions, so they accept
-        arrays directly and the whole cohort's accounting is a handful of
-        numpy ops instead of N python calls.
+        ``active_fraction``, ``share_fraction`` and ``uplink_ratio``
+        broadcast as (N,) arrays.  The per-token helpers are affine in
+        those fractions, so they accept arrays directly and the whole
+        cohort's accounting is a handful of numpy ops instead of N python
+        calls.
         """
         n = len(devices)
         af = np.broadcast_to(np.asarray(active_fraction, dtype=np.float64), (n,))
         sf = np.broadcast_to(np.asarray(share_fraction, dtype=np.float64), (n,))
+        ur = np.broadcast_to(np.asarray(uplink_ratio, dtype=np.float64), (n,))
         bw = np.broadcast_to(np.asarray(bandwidth_mbps, dtype=np.float64), (n,))
         profs = [DEVICE_PROFILES[d] for d in devices]
         cap = np.array([p.flops for p in profs])
@@ -249,7 +259,9 @@ class SystemModel:
             training=True, peft=peft_train, active_fraction=af
         )
         compute_time = flops / cap
-        bytes_ = self.comm_bytes(peft=peft_train, share_fraction=sf)
+        bytes_ = self.comm_bytes(
+            peft=peft_train, share_fraction=sf, uplink_ratio=ur
+        )
         comm_time = bytes_ * 8 / (bw * 1e6)
         mem = self.memory_breakdown(
             batch=batch, seq=seq, peft=peft_train, full_ft=full_ft, active_fraction=af

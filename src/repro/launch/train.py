@@ -65,6 +65,14 @@ def main():
                     help="async-buffer: aggregate every K arrivals")
     ap.add_argument("--staleness-alpha", type=float, default=None,
                     help="staleness discount exponent: w = 1/(1+s)^alpha")
+    ap.add_argument("--compression", default=None,
+                    choices=["none", "int8", "topk", "int8+topk", "auto"],
+                    help="uplink delta compression; 'auto' lets the joint "
+                    "bandit pick (dropout rate x level) arms; omit for the "
+                    "bit-exact uncompressed path")
+    ap.add_argument("--topk-fraction", type=float, default=None,
+                    help="fraction of entries top-k sparsification keeps "
+                    "per leaf (default 0.1)")
     ap.add_argument("--fault-plan", default=None,
                     help="JSON FaultPlan file (repro.federated.faults); the "
                     "--fault-* flags override its fields")
@@ -137,6 +145,8 @@ def main():
         straggler=args.straggler,
         buffer_size=args.buffer_size,
         staleness_alpha=args.staleness_alpha,
+        compression=args.compression,
+        topk_fraction=args.topk_fraction,
         checkpoint_dir=args.state_dir,
         resume=args.resume,
         fault_plan=fault_plan,
@@ -171,6 +181,7 @@ def main():
                 "arch": cfg.name,
                 "method": args.method,
                 "schedule": runner.schedule.policy,
+                "compression": args.compression,
                 "accuracy": res.accuracy.tolist(),
                 "cum_time_s": res.cum_time_s.tolist(),
                 "final_accuracy": res.final_accuracy,

@@ -1,0 +1,338 @@
+"""Compressed uplinks through the round loop.
+
+Covers the PR-10 tentpole end to end:
+
+* wire-format accounting cross-checked against real serialized buffers,
+* the quantize_int8 tuple-pytree regression and exact-k tie semantics,
+* EF unbiasedness property tests (hypothesis-fallback compatible),
+  including the staleness-weighted carry path (decayed residuals under
+  FedBuff-style down-weighting),
+* bit-transparency: ``compression=None`` and ``compression="none"``
+  reproduce the uncompressed round arrays exactly for every registered
+  method,
+* billing: compressed uplinks shrink virtual-clock comm time and traffic,
+* the joint (rate × level) bandit plumbing, and
+* checkpoint/resume with EF residual state.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_fallback import given, settings, st
+
+from repro import api
+from repro.configs import FederatedConfig, TrainConfig, get_config
+from repro.core.configurator import JointConfigurator
+from repro.data import make_task
+from repro.federated import compression as comp
+from repro.federated.algorithms import registered_methods
+
+_CFG = get_config("qwen3-1.7b", smoke=True).replace(
+    num_layers=4, d_model=32, d_ff=64, num_heads=2, num_kv_heads=2,
+    vocab_size=128, dtype="float32",
+)
+_FED = FederatedConfig(num_devices=5, devices_per_round=3, local_steps=2, batch_size=8)
+_TRAIN = TrainConfig(learning_rate=5e-3, total_steps=100, warmup_steps=2)
+_TASK = make_task(num_examples=256, vocab_size=128, seed=0)
+
+
+def _kw(**extra):
+    kw = dict(cfg=_CFG, fed_cfg=_FED, train_cfg=_TRAIN, task=_TASK, seed=0)
+    kw.update(extra)
+    return kw
+
+
+# ------------------------------------------------------------- wire format
+def _mixed_tree(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w": jax.random.normal(k1, (37, 5)),
+        "nested": (jax.random.normal(k2, (64,)), jax.random.normal(k3, (3,))),
+        "tiny": jnp.asarray([0.5]),
+        "ties": jnp.asarray([1.0, -1.0, 1.0, 0.0, -1.0, 0.5]),
+    }
+
+
+@pytest.mark.parametrize("kind", comp.LEVELS)
+def test_compressed_bytes_matches_serialized(key, kind):
+    """The accounting and the actual wire buffers can never disagree."""
+    tree = _mixed_tree(key)
+    cfg = comp.CompressionConfig(kind=kind, topk_fraction=0.25)
+    buffers = comp.serialize_compressed(tree, cfg)
+    assert comp.compressed_bytes(tree, cfg) == sum(b.nbytes for b in buffers)
+
+
+def test_no_phantom_scale_bytes():
+    """Scale bytes exist only on int8 paths (the old accounting billed
+    n_leaves*4 scales even for fp32 top-k payloads)."""
+    tree = {"a": jnp.zeros((100,)), "b": jnp.zeros((50,))}
+    k_a, k_b = comp.topk_k(100, 0.1), comp.topk_k(50, 0.1)
+    assert comp.compressed_bytes(tree, "topk") == 8 * (k_a + k_b)  # no +4/leaf
+    assert comp.compressed_bytes(tree, "int8+topk") == 5 * (k_a + k_b) + 2 * 4
+
+
+def test_per_leaf_k_accounting():
+    """k is computed per leaf with the k>=1 floor — a global int(n*f)
+    truncation undercounted small leaves to zero entries."""
+    tree = {"big": jnp.zeros((100,)), "small": jnp.zeros((3,))}
+    # f=0.1: big keeps 10, small keeps the floor of 1 (not 0)
+    assert comp.compressed_bytes(tree, "topk") == 8 * (10 + 1)
+
+
+def test_uplink_ratio_bounds(key):
+    tree = _mixed_tree(key)
+    assert comp.uplink_ratio(tree, "none") == 1.0
+    for kind in ("int8", "topk", "int8+topk"):
+        r = comp.uplink_ratio(tree, comp.CompressionConfig(kind=kind, topk_fraction=0.1))
+        assert 0.0 < r < 1.0
+
+
+# -------------------------------------------------------------- quantizer
+def test_quantize_int8_tuple_pytree(key):
+    """Regression: a pytree with legitimate tuple nodes (the stacked hetlora
+    layout) must round-trip with its structure intact — the old tuple-packed
+    is_leaf map collapsed it."""
+    tree = {
+        "layers": (
+            {"lora_a": jax.random.normal(key, (4, 8))},
+            {"lora_a": jax.random.normal(jax.random.fold_in(key, 1), (4, 8))},
+        ),
+        "pair": (jnp.ones((3,)), jnp.zeros((2,))),
+    }
+    vals, scales = comp.quantize_int8(tree)
+    assert jax.tree.structure(vals) == jax.tree.structure(tree)
+    assert jax.tree.structure(scales) == jax.tree.structure(tree)
+    back = comp.dequantize_int8(vals, scales)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert x.shape == y.shape
+        assert float(jnp.max(jnp.abs(x - y))) <= float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+
+
+def test_topk_exact_k_on_ties():
+    """Four tied magnitudes at the threshold: exactly k survive, lowest flat
+    indices win (the old >= threshold kept all four)."""
+    x = {"w": jnp.asarray([2.0, -2.0, 2.0, 2.0, 0.1, 0.2, 0.0, 0.3, 0.1, 0.05])}
+    sp = comp.topk_sparsify(x, 0.25)  # k = round(2.5) = 3
+    nz = np.flatnonzero(np.asarray(sp["w"]))
+    assert list(nz) == [0, 1, 2]
+
+
+@given(n=st.integers(1, 200), f=st.floats(0.01, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_topk_k_rounds_half_up(n, f):
+    k = comp.topk_k(n, f)
+    assert 1 <= k
+    assert k == max(1, int(np.floor(f * n + 0.5)))
+
+
+# --------------------------------------------------------- error feedback
+@given(kind=st.sampled_from(["int8", "topk", "int8+topk"]), scale=st.floats(0.01, 1.0))
+@settings(max_examples=9, deadline=None)
+def test_ef_unbiased_over_rounds(kind, scale):
+    """Cumulative sent signal tracks the cumulative true signal: the EF
+    residual stays bounded, so mean compression error -> 0 over rounds."""
+    key = jax.random.PRNGKey(int(scale * 1000) + len(kind))
+    true = {"w": scale * jax.random.normal(key, (256,))}
+    residual = jax.tree.map(jnp.zeros_like, true)
+    sent_sum = jnp.zeros((256,))
+
+    def mean_err_at(rounds, sent_sum, residual, start):
+        for _ in range(rounds - start):
+            sent, residual = comp.ef_step(true, residual, kind=kind, fraction=0.1)
+            sent_sum = sent_sum + sent["w"]
+        err = float(jnp.max(jnp.abs(sent_sum / rounds - true["w"])))
+        return err, sent_sum, residual
+
+    err15, sent_sum, residual = mean_err_at(15, sent_sum, residual, 0)
+    err60, _, _ = mean_err_at(60, sent_sum, residual, 15)
+    peak = float(jnp.max(jnp.abs(true["w"])))
+    # the per-round bias is residual/rounds: residual stays bounded (by ~one
+    # quantization step for int8, ~|x|/fraction for top-k), so it vanishes
+    # like 1/rounds — without EF the top-k error would never shrink at all
+    assert err60 < max(err15 * 0.55, 1e-5)
+    assert err60 < peak * 0.35 + 1e-4
+
+
+@given(alpha=st.floats(0.25, 2.0))
+@settings(max_examples=6, deadline=None)
+def test_ef_under_staleness_weighted_carry(alpha):
+    """FedBuff-style path: the server down-weights update t by
+    w_t = 1/(1+s_t)^alpha while the client decays its residual by the same
+    factor (ef_decay) — the decayed-residual correction keeps the *weighted*
+    cumulative sent signal tracking the weighted true signal."""
+    key = jax.random.PRNGKey(7)
+    true = {"w": 0.05 * jax.random.normal(key, (128,))}
+    staleness = [0, 1, 2, 0, 3, 1, 0, 2, 1, 0] * 6
+    weights = [1.0 / (1.0 + s) ** alpha for s in staleness]
+
+    def run(use_ef):
+        residual = jax.tree.map(jnp.zeros_like, true)
+        sent_acc, wsum, errs = jnp.zeros((128,)), 0.0, {}
+        for t, w in enumerate(weights, 1):
+            if use_ef:
+                sent, residual = comp.ef_step(
+                    true, residual, kind="int8+topk", fraction=0.2
+                )
+            else:
+                sent = comp.compress_decompress(true, kind="int8+topk", fraction=0.2)
+            sent_acc = sent_acc + w * sent["w"]
+            wsum += w
+            errs[t] = float(jnp.max(jnp.abs(sent_acc / wsum - true["w"])))
+        return errs
+
+    ef, plain = run(True), run(False)
+    # weighted-mean EF error shrinks over rounds despite the staleness
+    # discounts breaking the clean telescope...
+    assert ef[60] < ef[15] * 0.7 + 1e-6
+    # ...while plain compression leaves the unsent coordinates wrong forever
+    assert ef[60] < plain[60] * 0.5
+
+
+def test_ef_decay_shrinks_stale_residual():
+    """ef_decay < 1 geometrically forgets old compression error instead of
+    replaying it at full weight into a staleness-discounted aggregate."""
+    key = jax.random.PRNGKey(3)
+    true = {"w": 0.05 * jax.random.normal(key, (128,))}
+    res_full = jax.tree.map(jnp.zeros_like, true)
+    res_decay = jax.tree.map(jnp.zeros_like, true)
+    for _ in range(10):
+        _, res_full = comp.ef_step(true, res_full, kind="topk", fraction=0.05, decay=1.0)
+        _, res_decay = comp.ef_step(true, res_decay, kind="topk", fraction=0.05, decay=0.5)
+    assert float(jnp.sum(jnp.abs(res_decay["w"]))) < float(jnp.sum(jnp.abs(res_full["w"])))
+
+
+# --------------------------------------------------------- bit transparency
+@pytest.mark.parametrize("method", registered_methods())
+def test_compression_none_bit_transparent(method):
+    """compression="none" (and the filled machinery around it) reproduces
+    the pre-compression rounds exactly, for every registered method."""
+    base = api.experiment(method, rounds=2, **_kw())
+    none = api.experiment(method, rounds=2, compression="none", **_kw())
+    for field in ("accuracy", "loss", "cum_time_s", "traffic_mb", "energy_j", "rates"):
+        assert np.array_equal(getattr(base, field), getattr(none, field)), (
+            method, field,
+        )
+    assert base.final_accuracy == none.final_accuracy
+
+
+def test_compression_reduces_comm_billing():
+    """int8+topk uplinks shrink billed traffic and the virtual clock."""
+    base = api.experiment("droppeft", rounds=2, **_kw())
+    cmp_ = api.experiment(
+        "droppeft", rounds=2, compression="int8+topk", **_kw()
+    )
+    assert cmp_.traffic_mb.sum() < base.traffic_mb.sum()
+    assert cmp_.cum_time_s[-1] < base.cum_time_s[-1]
+
+
+def test_compressed_async_runs_with_staleness():
+    res = api.experiment(
+        "droppeft", rounds=3, compression="int8+topk",
+        schedule="async-buffer", staleness_alpha=0.5, **_kw(),
+    )
+    assert res.rounds == 3
+    assert np.all(np.isfinite(res.accuracy))
+
+
+def test_compression_flag_validation():
+    with pytest.raises(ValueError):
+        comp.resolve_compression(None, topk_fraction=0.2)
+    with pytest.raises(ValueError):
+        comp.resolve_compression("int8", topk_fraction=0.0)
+    with pytest.raises(ValueError):
+        comp.CompressionConfig(kind="int4")
+
+
+# ------------------------------------------------------------- joint bandit
+def test_joint_configurator_arms_and_state():
+    j = JointConfigurator(seed=0, levels=comp.LEVELS)
+    rates, levels = j.next_round_joint(4)
+    assert len(rates) == len(levels) == 4
+    assert all(lv in comp.LEVELS for lv in levels)
+    arms = list(zip(rates, levels))
+    j.report(arms, [0.01] * 4, [10.0] * 4)
+    assert all(isinstance(k, tuple) for k in j.arms)
+    blob = json.dumps(j.state_dict())
+    k = JointConfigurator(seed=99, levels=comp.LEVELS)
+    k.load_state_dict(json.loads(blob))
+    assert k.arms.keys() == j.arms.keys()
+    assert k.next_round_joint(3) == j.next_round_joint(3)
+
+
+def test_joint_configurator_snaps_float32_rates():
+    j = JointConfigurator(seed=0, levels=comp.LEVELS)
+    rates, levels = j.next_round_joint(3)
+    degraded = [float(np.float32(r)) for r in rates]
+    j.report(list(zip(degraded, levels)), [0.01] * 3, [5.0] * 3)
+    for rate, _ in j.arms:
+        assert rate in {float(r) for r in j.rate_grid} | {0.2, 0.5, 0.7}
+
+
+def test_joint_configurator_rate_floor():
+    j = JointConfigurator(seed=0, levels=comp.LEVELS)
+    j.set_rate_floor(0.4)
+    rates, levels = j.next_round_joint(6)
+    assert all(r >= 0.4 for r in rates)
+    assert all(lv in comp.LEVELS for lv in levels)
+
+
+def test_auto_builds_joint_configurator():
+    runner = api.build("droppeft", compression="auto", **_kw())
+    assert getattr(runner.state.configurator, "joint", False)
+    runner_fixed = api.build("droppeft", compression="int8", **_kw())
+    assert not getattr(runner_fixed.state.configurator, "joint", False)
+
+
+# --------------------------------------------------------- resume + durability
+def test_resume_with_compression_bit_exact(tmp_path):
+    """EF residuals ride the checkpoint: interrupt-and-resume equals the
+    uninterrupted run exactly."""
+    ck = str(tmp_path / "ck")
+    kw = _kw(compression="int8+topk", checkpoint_dir=ck)
+    full = api.experiment("droppeft", rounds=4, **_kw(compression="int8+topk"))
+    api.build("droppeft", **kw).run(rounds=2)
+    resumed = api.build("droppeft", resume=True, **kw).run(rounds=4)
+    assert np.array_equal(full.accuracy, resumed.accuracy)
+    assert np.array_equal(full.cum_time_s, resumed.cum_time_s)
+    assert full.final_accuracy == resumed.final_accuracy
+
+
+def test_resume_carry_with_compression(tmp_path):
+    """In-flight compressed jobs (uplink reconstruction + level) survive a
+    checkpoint/restore under deadline+carry."""
+    ck = str(tmp_path / "ck")
+    kw = _kw(
+        compression="int8", schedule="deadline", deadline_s=5.0,
+        straggler="carry", staleness_alpha=0.5, checkpoint_dir=ck,
+    )
+    full = api.experiment(
+        "droppeft", rounds=4,
+        **_kw(compression="int8", schedule="deadline", deadline_s=5.0,
+              straggler="carry", staleness_alpha=0.5),
+    )
+    api.build("droppeft", **kw).run(rounds=2)
+    resumed = api.build("droppeft", resume=True, **kw).run(rounds=4)
+    assert np.array_equal(full.accuracy, resumed.accuracy)
+    assert np.array_equal(full.cum_time_s, resumed.cum_time_s)
+
+
+def test_job_scalar_defaults_tolerate_v2_records():
+    """A pre-compression (v2) job record has no "comp"/"has_uplink" keys;
+    the scheduler loads it at the defaults instead of KeyError-ing."""
+    runner = api.build(
+        "droppeft", schedule="deadline", deadline_s=5.0, straggler="carry",
+        **_kw(),
+    )
+    runner.run(rounds=2)
+    jobs_arrays, meta = runner.scheduler.state_dict()
+    for rec in meta["jobs"]:
+        rec.pop("comp", None)
+        rec.pop("has_uplink", None)
+    for arrs in jobs_arrays:
+        arrs.pop("uplink_peft", None)
+    runner.scheduler.load_state_dict(jobs_arrays, meta)
+    for job in runner.scheduler._jobs.values():
+        assert job.comp == ""
+        assert job.uplink_peft is None

@@ -175,10 +175,14 @@ def test_async_buffer_aggregates_k_and_discounts_staleness():
     assert res_async.cum_time_s[-1] < res_sync.cum_time_s[-1]
 
 
-def test_checkpointing_refused_for_in_flight_policies(tmp_path):
-    with pytest.raises(ValueError, match="checkpoint"):
-        api.build(
-            "droppeft", cfg=_CFG, peft_cfg=_peft_cfg("droppeft"),
-            fed_cfg=_FED, train_cfg=_TRAIN, task=_TASK,
-            schedule="async-buffer", checkpoint_dir=str(tmp_path),
-        )
+def test_checkpointing_allowed_for_in_flight_policies(tmp_path):
+    """Durable rounds lifted the old refusal: async-buffer builds with a
+    checkpoint_dir and writes a snapshot (bit-exact resume is covered by
+    tests/test_durable_rounds.py)."""
+    runner = api.build(
+        "droppeft", cfg=_CFG, peft_cfg=_peft_cfg("droppeft"),
+        fed_cfg=_FED, train_cfg=_TRAIN, task=_TASK,
+        schedule="async-buffer", checkpoint_dir=str(tmp_path),
+    )
+    runner.run(rounds=1)
+    assert any(tmp_path.iterdir()), "no run-state snapshot written"
